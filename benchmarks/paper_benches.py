@@ -1,0 +1,199 @@
+"""One benchmark per paper table/figure.
+
+Each function returns a list of (name, us_per_call, derived) rows;
+`derived` carries the quantity the paper plots (reduction %, queue
+length, ...). run.py prints the combined CSV and writes
+artifacts/bench/*.json for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_workloads import (
+    TABLE_I, V_PAPER, paper_spec,
+)
+from repro.core import (
+    CarbonIntensityPolicy,
+    QueueLengthPolicy,
+    RandomCarbonSource,
+    UKRegionalTraceSource,
+    UniformArrivals,
+    simulate,
+    simulate_vsweep,
+)
+
+Row = Tuple[str, float, float]
+
+
+def _timeit(fn, n=5) -> float:
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_table1() -> List[Row]:
+    """Table I: energy consumption per AI-training task type (config echo
+    + the derived per-task carbon at mean UK intensity ~200 gCO2/kWh)."""
+    rows = []
+    for name, pc, pe in TABLE_I:
+        rows.append((f"table1/{name}", 0.0, pc * 200.0))
+    return rows
+
+
+def _paper_setup(carbon):
+    spec = paper_spec()
+    arrive = UniformArrivals(M=5, amax=400)
+    key = jax.random.PRNGKey(0)
+    T = 2000
+    return spec, arrive, key, T, carbon
+
+
+def bench_fig2_random() -> List[Row]:
+    """Fig. 2: cumulative emissions, random carbon intensity.
+    derived = % reduction vs queue-length policy (paper: 63% @ V=0.05)."""
+    spec, arrive, key, T, carbon = _paper_setup(RandomCarbonSource(N=5))
+    rows = []
+
+    def run(policy):
+        return simulate(policy, spec, carbon, arrive, T, key).cum_emissions
+
+    base = None
+    for name, pol in [
+        ("queue-length", QueueLengthPolicy()),
+        ("carbon V=0.01", CarbonIntensityPolicy(V=0.01)),
+        ("carbon V=0.05", CarbonIntensityPolicy(V=0.05)),
+        ("carbon V=0.20", CarbonIntensityPolicy(V=0.20)),
+        ("carbon V=0.05 nofirstfit",
+         CarbonIntensityPolicy(V=0.05, stop_at_first_unfit=False)),
+    ]:
+        f = jax.jit(lambda pol=pol: run(pol))
+        us = _timeit(f, n=3)
+        cum = float(f()[-1])
+        if base is None:
+            base = cum
+        rows.append((f"fig2/{name}", us, 100.0 * (1 - cum / base)))
+    return rows
+
+
+def bench_fig3_realworld() -> List[Row]:
+    """Fig. 3: cumulative emissions, UK-regional traces (paper: 54%)."""
+    spec, arrive, key, T, carbon = _paper_setup(UKRegionalTraceSource(N=5))
+    rows = []
+
+    def run(policy):
+        return simulate(policy, spec, carbon, arrive, T, key).cum_emissions
+
+    base = None
+    for name, pol in [
+        ("queue-length", QueueLengthPolicy()),
+        ("carbon V=0.05", CarbonIntensityPolicy(V=0.05)),
+        ("carbon V=0.20", CarbonIntensityPolicy(V=0.20)),
+    ]:
+        f = jax.jit(lambda pol=pol: run(pol))
+        us = _timeit(f, n=3)
+        cum = float(f()[-1])
+        if base is None:
+            base = cum
+        rows.append((f"fig3/{name}", us, 100.0 * (1 - cum / base)))
+    return rows
+
+
+def bench_fig4_queues() -> List[Row]:
+    """Fig. 4: average edge-queue length (type m=1), random carbon.
+    derived = mean Qe[0] over the horizon -- shows the V/delay tradeoff."""
+    spec, arrive, key, T, carbon = _paper_setup(RandomCarbonSource(N=5))
+    rows = []
+    for name, pol in [
+        ("queue-length", QueueLengthPolicy()),
+        ("carbon V=0.01", CarbonIntensityPolicy(V=0.01)),
+        ("carbon V=0.05", CarbonIntensityPolicy(V=0.05)),
+        ("carbon V=0.20", CarbonIntensityPolicy(V=0.20)),
+    ]:
+        f = jax.jit(
+            lambda pol=pol: simulate(pol, spec, carbon, arrive, T, key).Qe
+        )
+        us = _timeit(f, n=3)
+        qe = np.asarray(f())
+        rows.append((f"fig4/{name}", us, float(qe[:, 0].mean())))
+    return rows
+
+
+def bench_vsweep() -> List[Row]:
+    """Beyond-paper: the whole Fig2+Fig4 tradeoff curve in ONE vmapped
+    simulation (emissions reduction and delay vs V)."""
+    spec, arrive, key, T, carbon = _paper_setup(RandomCarbonSource(N=5))
+    Vs = jnp.asarray([0.005, 0.01, 0.02, 0.05, 0.1, 0.2])
+
+    f = jax.jit(lambda: simulate_vsweep(
+        lambda V: CarbonIntensityPolicy(V=V), Vs, spec, carbon, arrive, T,
+        key,
+    ).cum_emissions[:, -1])
+    us = _timeit(f, n=2)
+    base = float(jax.jit(lambda: simulate(
+        QueueLengthPolicy(), spec, carbon, arrive, T, key
+    ).cum_emissions[-1])())
+    cums = np.asarray(f())
+    return [
+        (f"vsweep/V={float(v):g}", us / len(cums),
+         100.0 * (1 - c / base))
+        for v, c in zip(Vs, cums)
+    ]
+
+
+def bench_policy_throughput() -> List[Row]:
+    """Scheduler scalability: per-slot decision latency vs problem size
+    (paper complexity claim: ~O(MN log MN)); plus the fused Pallas score
+    kernel vs the jnp reference at the largest size."""
+    from repro.core.policies import CarbonIntensityPolicy
+    from repro.core.queueing import NetworkSpec, NetworkState
+    from repro.kernels import ops
+
+    rows = []
+    rng = np.random.default_rng(0)
+    pol = CarbonIntensityPolicy(V=0.05)
+    for M, N in [(5, 5), (64, 16), (512, 64), (2048, 256)]:
+        spec = NetworkSpec(
+            pe=rng.uniform(1, 8, M).astype(np.float32),
+            pc=rng.uniform(2, 100, (M, N)).astype(np.float32),
+            Pe=1e4,
+            Pc=rng.uniform(1e3, 1e5, N).astype(np.float32),
+        )
+        state = NetworkState(
+            Qe=jnp.asarray(rng.integers(0, 1000, M).astype(np.float32)),
+            Qc=jnp.asarray(rng.integers(0, 1000, (M, N)).astype(np.float32)),
+        )
+        Ce = jnp.float32(300.0)
+        Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+        f = jax.jit(lambda s: pol(s, spec, Ce, Cc, None, None))
+        us = _timeit(lambda: f(state), n=10)
+        rows.append((f"policy/M{M}xN{N}", us, M * N))
+
+    # fused score kernel (interpret on CPU; compiled on TPU)
+    M, N = 2048, 256
+    Qc = jnp.asarray(rng.integers(0, 1000, (M, N)).astype(np.float32))
+    pc = jnp.asarray(rng.uniform(2, 100, (M, N)).astype(np.float32))
+    Qe = jnp.asarray(rng.integers(0, 1000, M).astype(np.float32))
+    pe = jnp.asarray(rng.uniform(1, 8, M).astype(np.float32))
+    Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+    f_ref = jax.jit(lambda: ops.carbon_scores_ref(Qc, pc, Qe, pe, Cc,
+                                                  jnp.float32(15.0)))
+    rows.append(("score_ref/M2048xN256", _timeit(f_ref, 10), M * N))
+    return rows
+
+
+ALL_BENCHES = [
+    bench_table1,
+    bench_fig2_random,
+    bench_fig3_realworld,
+    bench_fig4_queues,
+    bench_vsweep,
+    bench_policy_throughput,
+]

@@ -1,0 +1,200 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+  memory term     = HLO_bytes_per_device / HBM_bw              [s]
+  collective term = collective_bytes_per_device / link_bw      [s]
+(the HLO module is already SPMD-partitioned, so cost_analysis numbers are
+per-device; collective bytes are parsed from the compiled HLO with ring
+weighting -- see launch/dryrun.parse_collective_bytes.)
+
+Derived:
+  MODEL_FLOPS  = useful math: 6*N_active*tokens (train),
+                 2*N_active*tokens (prefill/decode), per device
+  flop_ratio   = MODEL_FLOPS / HLO_FLOPS  (remat/redundancy waste)
+  bound        = argmax of the three terms (the bottleneck)
+  roofline_mfu = (MODEL_FLOPS/peak) / max(terms)  -- the MFU the compiled
+                 program would reach if it exactly hit its dominant bound;
+                 this is the roofline fraction reported in §Perf.
+
+TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import registry
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def _attention_flops_fwd(cfg, B: int, Sq: int, Skv: int,
+                         causal: bool) -> float:
+    """Useful attention math (2 einsums x 2 flops/MAC), causal-halved."""
+    if not cfg.n_heads:
+        return 0.0
+    n_attn = (cfg.n_layers // cfg.attn_every if cfg.family == "hybrid"
+              else cfg.n_layers)
+    hd = cfg.resolved_head_dim
+    frac = 0.5 if (causal and Sq == Skv) else 1.0
+    return 4.0 * B * cfg.n_heads * Sq * Skv * hd * frac * n_attn
+
+
+def _ssd_flops_fwd(cfg, B: int, S: int) -> float:
+    """SSD useful math per forward: intra-chunk quadratic + state terms."""
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    n_ssm = (cfg.n_layers - cfg.n_layers // cfg.attn_every
+             if cfg.family == "hybrid" else cfg.n_layers)
+    H, P, N, Q = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_chunk
+    per_tok = 2 * N * Q / 2 + 2 * H * P * Q / 2  # scores + y_diag (causal)
+    per_tok += 4 * H * P * N  # state outer-product + y_off
+    return per_tok * B * S * n_ssm * 2  # x2 flops/MAC folded
+
+
+def model_flops_per_device(rec) -> float:
+    """Useful algorithmic FLOPs: 2*N_active per token (+attention/SSD
+    terms), x3 for train (fwd+bwd). Approximate by design -- it is the
+    numerator of the roofline MFU, not an exact replay of the HLO."""
+    cfg = registry.get_config(rec["arch"])
+    shp = registry.SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+    n_act = cfg.active_params()
+    B = shp["global_batch"]
+    S = shp["seq_len"]
+    if shp["kind"] == "train":
+        tokens = S * B
+        total = 6.0 * n_act * tokens
+        total += 3.0 * (_attention_flops_fwd(cfg, B, S, S, True)
+                        + _ssd_flops_fwd(cfg, B, S))
+    elif shp["kind"] == "prefill":
+        tokens = S * B
+        total = 2.0 * n_act * tokens
+        total += _attention_flops_fwd(cfg, B, S, S, True) + \
+            _ssd_flops_fwd(cfg, B, S)
+    else:  # decode: one new token attending to the full cache
+        total = 2.0 * n_act * B
+        total += _attention_flops_fwd(cfg, B, 1, S, False)
+        if cfg.family in ("ssm", "hybrid"):
+            total += _ssd_flops_fwd(cfg, B, 1)
+    return total / n_dev
+
+
+def analyze_record(rec) -> dict:
+    if "cost_corrected" in rec:  # loop-trip-count corrected (see dryrun)
+        flops = rec["cost_corrected"]["flops"]
+        bytes_acc = rec["cost_corrected"]["bytes"]
+        coll = rec["cost_corrected"]["collective_bytes"]
+    else:
+        flops = rec["cost"]["flops_per_device"]
+        bytes_acc = rec["cost"]["bytes_accessed_per_device"]
+        coll = rec["collectives"]["total_bytes"]
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_acc / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bound = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    t_bound = max(terms.values())
+    out = {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "seq_parallel": bool(rec.get("seq_parallel", False)),
+        "calibrated": "cost_corrected" in rec,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bound": bound,
+        "model_flops_per_device": mf,
+        "hlo_flops_per_device": flops,
+        "flop_ratio": mf / flops if flops else 0.0,
+        "roofline_mfu": (mf / PEAK_FLOPS) / t_bound if t_bound else 0.0,
+        "temp_bytes": rec["memory"].get("temp_size_in_bytes", 0),
+        "arg_bytes": rec["memory"].get("argument_size_in_bytes", 0),
+    }
+    out["suggestion"] = suggest(out, rec)
+    return out
+
+
+def suggest(a, rec) -> str:
+    if a["bound"] == "collective":
+        big = max(rec["collectives"]["bytes"],
+                  key=rec["collectives"]["bytes"].get)
+        return (f"dominant collective is {big}: reshard to cut it "
+                f"(FSDP gather grouping / EP a2a payload / hierarchical "
+                f"pod reduction)")
+    if a["bound"] == "memory":
+        if a["flop_ratio"] < 0.5:
+            return ("HLO does >2x useful FLOPs worth of traffic: check "
+                    "remat policy and fp32 stacks in the saved residuals")
+        return "fuse elementwise chains / shrink attention score dtype"
+    if a["flop_ratio"] < 0.6:
+        return ("compute-bound but <60% useful FLOPs: redundant recompute "
+                "(remat) or padded shards dominate; revisit block remat "
+                "policy / uneven-dim sharding")
+    return "near compute roofline: tune block shapes (MXU alignment)"
+
+
+def load_all():
+    recs = []
+    for p in sorted((ART / "dryrun").glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") == "ok":
+            recs.append(rec)
+    return recs
+
+
+def run(write: bool = True):
+    rows = [analyze_record(r) for r in load_all()]
+    if write:
+        (ART / "roofline.json").write_text(json.dumps(rows, indent=2))
+    return rows
+
+
+def bench_roofline():
+    """Bench-harness adapter: derived = roofline_mfu (%); us = dominant
+    term in microseconds. Single-pod cells only (per the brief)."""
+    rows = run()
+    out = []
+    for a in rows:
+        if a["mesh"] != "single":
+            continue
+        t = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+        sp = "__sp" if a.get("seq_parallel") else ""
+        out.append((
+            f"roofline/{a['arch']}__{a['shape']}{sp}",
+            t * 1e6,
+            100.0 * a["roofline_mfu"],
+        ))
+    return out
+
+
+def markdown_table(rows=None, mesh="single") -> str:
+    rows = rows or run(write=False)
+    lines = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bound "
+        "| MODEL/HLO flops | roofline MFU |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for a in rows:
+        if a["mesh"] != mesh:
+            continue
+        sp = " **+SP**" if a.get("seq_parallel") else ""
+        lines.append(
+            f"| {a['arch']}{sp} | {a['shape']} | {a['t_compute_s']*1e3:.2f} "
+            f"| {a['t_memory_s']*1e3:.2f} | {a['t_collective_s']*1e3:.2f} "
+            f"| **{a['bound']}** | {a['flop_ratio']:.2f} "
+            f"| {a['roofline_mfu']*100:.1f}% |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown_table(rows))

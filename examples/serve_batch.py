@@ -1,0 +1,67 @@
+"""Serve a small model with batched requests: prefill + KV-cache decode,
+with carbon-aware admission (batches run eagerly when intensity is low,
+are deferred -- up to an SLA bound -- when it is high: the paper's
+"when" flexibility applied to inference).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.carbon import UKRegionalTraceSource
+from repro.launch.serve import greedy_generate
+from repro.models import build_model
+
+SLA_SLOTS = 3          # a batch may be deferred at most this many slots
+CI_THRESHOLD = 220.0   # run immediately below this intensity (gCO2/kWh)
+
+
+def main():
+    cfg = registry.get_smoke_config("qwen1_5_0_5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    carbon = UKRegionalTraceSource(N=1)
+    rng = np.random.default_rng(0)
+
+    queue = []   # (arrival_slot, prompts)
+    emitted = 0.0
+    served = 0
+    energy_per_batch = 0.02  # kWh proxy for this tiny model
+
+    for slot in range(16):
+        Ce, _ = carbon(jnp.asarray(slot), jax.random.PRNGKey(0))
+        ci = float(Ce)
+        # two new request batches arrive per slot
+        for _ in range(2):
+            queue.append((slot, rng.integers(
+                0, cfg.vocab_size, (2, 16)).astype(np.int32)))
+
+        run_now = []
+        if ci < CI_THRESHOLD:
+            run_now, queue = queue, []          # green power: drain
+        else:
+            keep = []
+            for arr, p in queue:                # defer unless SLA-expired
+                (run_now if slot - arr >= SLA_SLOTS else keep).append(
+                    (arr, p))
+            queue = keep
+
+        for arr, prompts in run_now:
+            toks = greedy_generate(model, params, jnp.asarray(prompts),
+                                   gen_len=8, cache_len=32)
+            served += 1
+            emitted += ci * energy_per_batch
+        print(f"slot {slot:2d} CI {ci:6.1f} ran {len(run_now):2d} "
+              f"deferred {len(queue):2d} emitted {emitted:7.2f}")
+
+    print(f"\nserved {served} batches, emissions {emitted:.2f} gCO2-eq")
+    print("(an always-run policy would emit at the mean CI; deferral "
+          "shifts work into the low-carbon slots)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""End-to-end driver: carbon-aware orchestration of REAL training jobs.
+
+Two LM training jobs (reduced qwen1.5 and internlm2 configs, ~a few M
+params each on CPU; the same code paths drive the full configs on a pod)
+run under the GreenOrchestrator: the paper's drift-plus-penalty policy
+decides, slot by slot, when and on which "cloud" each training task
+executes, based on live (synthetic UK-regional) carbon intensity.
+
+Demonstrates: a few hundred real optimizer steps, emission accounting,
+checkpoint/restart (kill and re-run the script -- it resumes), and a
+mid-run simulated cloud failure with automatic re-routing.
+
+    PYTHONPATH=src python examples/train_carbon_aware.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core.carbon import UKRegionalTraceSource
+from repro.core.policies import CarbonIntensityPolicy
+from repro.core.queueing import NetworkSpec
+from repro.data.pipeline import make_batch_fn
+from repro.models import build_model
+from repro.optim.adamw import AdamW, cosine_schedule, make_train_step
+from repro.orchestrator.green import Cloud, GreenOrchestrator, TrainJob
+
+CKPT_DIR = "/tmp/repro_green_ckpt"
+N_SLOTS = 40
+STEPS_PER_TASK = 4  # each scheduled task = 4 real optimizer steps
+
+
+def make_jobs():
+    jobs = []
+    for i, aid in enumerate(["qwen1_5_0_5b", "internlm2_20b"]):
+        cfg = registry.get_smoke_config(aid)
+        model = build_model(cfg)
+        opt = AdamW(lr=cosine_schedule(1e-3, 20, 400))
+        params = model.init(jax.random.PRNGKey(i))
+        jobs.append(TrainJob(
+            name=aid,
+            model=model,
+            train_step=jax.jit(make_train_step(model, opt)),
+            batch_fn=make_batch_fn(cfg, seq_len=128, global_batch=4, seed=i),
+            params=params,
+            opt_state=opt.init(params),
+            steps_per_task=STEPS_PER_TASK,
+        ))
+    return jobs
+
+
+def arrivals(t):
+    rng = np.random.default_rng((42, t))
+    return rng.integers(0, 3, 2).astype(np.float32)
+
+
+def main():
+    spec = NetworkSpec(
+        pe=np.asarray([0.5, 0.8], np.float32),
+        pc=np.asarray([[4.0, 4.0], [7.0, 7.0]], np.float32),
+        Pe=6.0,
+        Pc=np.asarray([16.0, 16.0], np.float32),
+    )
+    orch = GreenOrchestrator(
+        jobs=make_jobs(),
+        clouds=[Cloud("eu-north"), Cloud("uk-south")],
+        spec=spec,
+        carbon_source=UKRegionalTraceSource(N=2),
+        arrival_fn=arrivals,
+        policy=CarbonIntensityPolicy(V=0.01),
+        ckpt_dir=CKPT_DIR,
+        ckpt_every=5,
+        max_tasks_per_slot=2,
+    )
+    if orch.resume():
+        print(f"resumed from slot {orch.t} "
+              f"(cum emissions {orch.cum_emissions:.1f})")
+
+    while orch.t < N_SLOTS:
+        slot = orch.t
+        if slot == 20:
+            orch.fail_cloud(1)
+            print("  !! cloud uk-south failed; policy re-routes to eu-north")
+        if slot == 30:
+            orch.join_cloud(1)
+            print("  !! cloud uk-south rejoined")
+        h = orch.run_slot()
+        losses = {k: f"{v:.3f}" for k, v in h.items() if k.startswith("loss")}
+        print(f"slot {slot:3d} emissions {h['emissions']:8.1f} "
+              f"backlog {h['backlog']:5.0f} executed {h['executed']:4d} "
+              f"{losses}")
+    if orch.ckpt:
+        orch.checkpoint()
+        orch.ckpt.wait()
+
+    print(f"\ntotal steps trained: "
+          f"{ {j.name: j.step for j in orch.jobs} }")
+    print(f"cumulative emissions: {orch.cum_emissions:.1f} gCO2-eq")
+    for j in orch.jobs:
+        if len(j.losses) >= 2:
+            print(f"  {j.name}: loss {j.losses[0]:.3f} -> {j.losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

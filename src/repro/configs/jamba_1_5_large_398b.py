@@ -1,0 +1,51 @@
+"""Jamba-1.5-Large 398B [arXiv:2403.19887; hf] — hybrid Mamba+attention
+with 1:7 interleave (one GQA attention layer per 8), MoE 16 experts top-2
+on every other layer. 72 layers, d_model 8192."""
+from repro.configs.registry import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    activation="swiglu",
+    n_experts=16,
+    n_experts_active=2,
+    moe_d_ff=24576,
+    moe_every=2,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    attn_every=8,
+)
+
+SMOKE = ModelConfig(
+    name="jamba-smoke",
+    family="hybrid",
+    n_layers=4,  # one super-block of attn_every=4 -> 1 attn + 3 mamba
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab_size=512,
+    activation="swiglu",
+    n_experts=4,
+    n_experts_active=2,
+    moe_path="dense",
+    ep_axis=2,
+    moe_d_ff=192,
+    moe_every=2,
+    ssm_state=16,
+    ssm_head_dim=16,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=8,
+    attn_every=4,
+    param_dtype="float32",
+    compute_dtype="float32",
+)

@@ -1,0 +1,87 @@
+"""Paper §V experimental setup (Table I + network constants).
+
+M=5 AI-training task types on ImageNet; N=5 homogeneous clouds.
+Energy in kWh. Also exposes `lm_workloads()` which extends the task-type
+set with the assigned LM architectures, costed from their per-step FLOPs
+(6*N_active*D) at a TPU-v5e J/FLOP — the bridge between the paper's
+scheduler and this repo's training data plane.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.queueing import NetworkSpec
+
+# Table I: (model, pc kWh (all clouds), pe kWh)
+TABLE_I = (
+    ("ResNet50", 74.0, 3.45),
+    ("InceptionV3", 97.0, 3.45),
+    ("DenseNet121", 54.0, 3.45),
+    ("SqueezeNet", 16.0, 3.45),
+    ("MobileNetV2", 5.8, 3.45),
+)
+
+P_EDGE = 4000.0          # kWh per slot
+P_CLOUD = 30000.0        # kWh per slot, each of N=5 clouds
+N_CLOUDS = 5
+A_MAX = 400              # a_m(t) ~ U{0..400}
+V_PAPER = 0.05
+C_MAX_RANDOM = 700       # random carbon intensity ~ U{0..700}
+
+
+def paper_spec() -> NetworkSpec:
+    pe = np.array([row[2] for row in TABLE_I], np.float32)
+    pc = np.tile(
+        np.array([row[1] for row in TABLE_I], np.float32)[:, None],
+        (1, N_CLOUDS),
+    )
+    return NetworkSpec(
+        pe=pe, pc=pc, Pe=P_EDGE, Pc=np.full((N_CLOUDS,), P_CLOUD, np.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bridge: LM architectures as task types.
+# Energy per "task" = training-step bundle of `steps_per_task` steps:
+#   FLOPs = 6 * N_active_params * tokens_per_step * steps_per_task
+#   energy_kWh = FLOPs / (MFU * peak_flops) * chip_power_kW / 3600 * chips
+# We fold chips out by using per-chip seconds * kW; what matters to the
+# scheduler is only the *relative* pc and the budget scale.
+_V5E_PEAK = 197e12      # bf16 FLOP/s
+_V5E_KW = 0.25          # ~chip power (kW) under load, incl. amortized host
+_MFU = 0.4
+
+
+def lm_task_energy_kwh(
+    n_active_params: float, tokens_per_step: float, steps_per_task: int = 100
+) -> float:
+    flops = 6.0 * n_active_params * tokens_per_step * steps_per_task
+    seconds = flops / (_MFU * _V5E_PEAK)
+    return seconds / 3600.0 * _V5E_KW
+
+
+def lm_workloads(arch_ids=None, n_clouds: int = N_CLOUDS) -> NetworkSpec:
+    """NetworkSpec whose task types are the assigned LM architectures."""
+    from repro.configs import registry
+
+    arch_ids = arch_ids or registry.ARCH_IDS
+    pcs, pes = [], []
+    for aid in arch_ids:
+        cfg = registry.get_config(aid)
+        tokens = 4096 * 8  # one micro-bundle of train_4k tokens
+        pc = lm_task_energy_kwh(cfg.active_params(), tokens)
+        # edge send cost ~ checkpoint-shard + data shard transfer at
+        # 0.023 kWh/GB (paper's Malmodin-Lunden figure).
+        gb = cfg.active_params() * 2 / 1e9 * 0.05  # 5% of weights per task
+        pes.append(max(gb * 0.023, 1e-3))
+        pcs.append(pc)
+    pe = np.asarray(pes, np.float32)
+    pc = np.tile(np.asarray(pcs, np.float32)[:, None], (1, n_clouds))
+    # Budgets scaled so the mean load is ~0.35 like the paper's setup.
+    mean_demand = float(np.mean(pc)) * (A_MAX / 2) * len(arch_ids)
+    return NetworkSpec(
+        pe=pe,
+        pc=pc,
+        Pe=float(np.mean(pe) * (A_MAX / 2) * len(arch_ids) / 0.85),
+        Pc=np.full((n_clouds,), mean_demand / n_clouds / 0.35, np.float32),
+    )

@@ -1,0 +1,43 @@
+"""SeamlessM4T-medium [arXiv:2308.11596; hf] — encoder-decoder multimodal
+backbone. The speech frontend is a STUB (input_specs provides precomputed
+frame embeddings [B, source_len, d_model]). 12L encoder + 12L decoder with
+cross-attention, GELU, sinusoidal positions on the encoder, RoPE-free
+decoder (learned-free; absolute sinusoidal). Vocab padded 256206 -> 256256
+for TP divisibility (see distributed/sharding.py)."""
+from repro.configs.registry import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    n_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    activation="gelu",
+    norm="layernorm",
+    is_encoder_decoder=True,
+    n_encoder_layers=12,
+    source_len=4096,
+    frontend_stub="frames",
+)
+
+SMOKE = ModelConfig(
+    name="seamless-smoke",
+    family="audio",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    activation="gelu",
+    norm="layernorm",
+    is_encoder_decoder=True,
+    n_encoder_layers=2,
+    source_len=32,
+    frontend_stub="frames",
+    param_dtype="float32",
+    compute_dtype="float32",
+)

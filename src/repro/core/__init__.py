@@ -1,0 +1,69 @@
+"""Core: the paper's contribution — virtual queueing network + carbon-
+intensity based drift-plus-penalty scheduling."""
+from repro.core.queueing import (
+    Action,
+    NetworkSpec,
+    NetworkState,
+    drift_bound_B,
+    emissions,
+    init_state,
+    is_feasible,
+    lyapunov,
+    step,
+)
+from repro.core.policies import (
+    CarbonIntensityPolicy,
+    ExactDPPPolicy,
+    QueueLengthPolicy,
+    RandomPolicy,
+)
+from repro.core.carbon import (
+    ConstantCarbonSource,
+    RandomCarbonSource,
+    TableCarbonSource,
+    UKRegionalTraceSource,
+)
+from repro.core.simulator import (
+    PoissonArrivals,
+    SimResult,
+    UniformArrivals,
+    simulate,
+    simulate_vsweep,
+)
+
+__all__ = [
+    "Action",
+    "NetworkSpec",
+    "NetworkState",
+    "drift_bound_B",
+    "emissions",
+    "init_state",
+    "is_feasible",
+    "lyapunov",
+    "step",
+    "CarbonIntensityPolicy",
+    "ExactDPPPolicy",
+    "QueueLengthPolicy",
+    "RandomPolicy",
+    "ConstantCarbonSource",
+    "RandomCarbonSource",
+    "TableCarbonSource",
+    "UKRegionalTraceSource",
+    "PoissonArrivals",
+    "SimResult",
+    "UniformArrivals",
+    "simulate",
+    "simulate_vsweep",
+]
+
+from repro.core.extensions import (  # noqa: E402
+    AdaptiveVController,
+    ThresholdPolicy,
+    oracle_emissions_for_work,
+)
+
+__all__ += [
+    "AdaptiveVController",
+    "ThresholdPolicy",
+    "oracle_emissions_for_work",
+]

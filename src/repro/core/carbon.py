@@ -1,0 +1,166 @@
+"""Carbon-intensity sources (paper §V scenarios).
+
+Two scenarios from the paper plus a drop-in loader for real data:
+
+  * RandomCarbonSource     -- Ce(t), Cc_n(t) ~ U{0..700} i.i.d.   (Fig. 2)
+  * UKRegionalTraceSource  -- realistic synthetic stand-in for the
+    National Grid ESO regional 30-min traces used in Fig. 3. The real API
+    is unreachable offline; this generator reproduces the structure of
+    2022 UK regional carbon intensity: a diurnal cycle (demand peaking
+    ~18:00), multi-day wind-front excursions, region-specific means
+    (Scotland low / South Wales high), and short spikes. A CSV loader with
+    the ESO schema (`from_eso_csv`) accepts real exports verbatim.
+  * ConstantCarbonSource   -- for unit tests / ablations.
+
+A source is a callable `(t_slot:int32, key) -> (Ce scalar, Cc [N])`, pure
+JAX so the simulator scans over it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomCarbonSource:
+    """Paper Fig. 2: each intensity i.i.d. uniform over {0..cmax}."""
+
+    N: int
+    cmax: int = 700
+
+    def __call__(self, t: Array, key: Array) -> Tuple[Array, Array]:
+        ke, kc = jax.random.split(jax.random.fold_in(key, t))
+        Ce = jax.random.randint(ke, (), 0, self.cmax + 1).astype(jnp.float32)
+        Cc = jax.random.randint(kc, (self.N,), 0, self.cmax + 1).astype(
+            jnp.float32
+        )
+        return Ce, Cc
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantCarbonSource:
+    N: int
+    Ce: float = 200.0
+    Cc: float = 200.0
+
+    def __call__(self, t: Array, key: Array) -> Tuple[Array, Array]:
+        del key
+        return (
+            jnp.asarray(self.Ce, jnp.float32),
+            jnp.full((self.N,), self.Cc, jnp.float32),
+        )
+
+
+# 2022-ish UK regional profile parameters: (mean gCO2/kWh, diurnal
+# amplitude, wind sensitivity). Region 0 backs the edge server; 1..5 back
+# the five clouds (paper uses 6 ESO regions). Tuple-of-tuples so the
+# frozen dataclass stays hashable (jit static arg friendly).
+_UK_REGIONS = (
+    # mean, diurnal_amp, wind_sens
+    (180.0, 60.0, 120.0),  # London          (edge)
+    (45.0, 20.0, 35.0),    # North Scotland  (hydro/wind heavy)
+    (330.0, 80.0, 150.0),  # South Wales     (gas heavy)
+    (210.0, 70.0, 130.0),  # Midlands
+    (120.0, 50.0, 90.0),   # North West
+    (260.0, 75.0, 140.0),  # South East
+)
+
+_SLOTS_PER_DAY = 48  # 30-minute slots, as in the ESO dataset
+
+
+@dataclasses.dataclass(frozen=True)
+class UKRegionalTraceSource:
+    """Synthetic stand-in for National Grid ESO regional traces (Fig. 3).
+
+    Deterministic in (seed, t): the trace is a pure function, so scan /
+    vmap / checkpoint-restart all see the same world.
+    """
+
+    N: int = 5
+    seed: int = 2022
+    regions: tuple = _UK_REGIONS
+
+    def _region_value(self, region: Array, t: Array, key: Array) -> Array:
+        params = jnp.asarray(np.asarray(self.regions, np.float32))  # [R,3]
+        mean = params[region, 0]
+        amp = params[region, 1]
+        wind = params[region, 2]
+        day_phase = 2.0 * jnp.pi * (t % _SLOTS_PER_DAY) / _SLOTS_PER_DAY
+        # Demand peaks around 18:00 -> phase shift; solar dip mid-day.
+        diurnal = amp * (
+            jnp.sin(day_phase - 2.0 * jnp.pi * 18.0 / 24.0)
+            + 0.3 * jnp.sin(2.0 * day_phase)
+        )
+        # Wind fronts: slow sinusoids with region-coherent + national terms.
+        tt = t.astype(jnp.float32)
+        national = jnp.sin(2 * jnp.pi * tt / (_SLOTS_PER_DAY * 3.3) + 1.7)
+        regional = jnp.sin(
+            2 * jnp.pi * tt / (_SLOTS_PER_DAY * 2.1) + region.astype(jnp.float32)
+        )
+        front = wind * (0.7 * national + 0.3 * regional)
+        noise = 25.0 * jax.random.normal(jax.random.fold_in(key, region))
+        return jnp.clip(mean + diurnal + front + noise, 5.0, 700.0)
+
+    def __call__(self, t: Array, key: Array) -> Tuple[Array, Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), t)
+        regions = jnp.arange(self.N + 1)
+        vals = jax.vmap(lambda r: self._region_value(r, t, key))(regions)
+        return vals[0], vals[1 : self.N + 1]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: ndarray field
+class TableCarbonSource:
+    """Plays back a precomputed table. table: [T, N+1]; column 0 = edge."""
+
+    table: np.ndarray
+
+    def __post_init__(self):
+        assert self.table.ndim == 2 and self.table.shape[1] >= 2
+
+    @property
+    def N(self) -> int:
+        return self.table.shape[1] - 1
+
+    def __call__(self, t: Array, key: Array) -> Tuple[Array, Array]:
+        del key
+        tab = jnp.asarray(self.table, jnp.float32)
+        row = tab[t % tab.shape[0]]
+        return row[0], row[1:]
+
+
+def from_eso_csv(path: str, n_regions: int) -> TableCarbonSource:
+    """Loads a National Grid ESO regional forecast CSV export.
+
+    Expected columns: datetime, then one intensity column per region
+    (gCO2/kWh). The first region backs the edge, the next `n_regions`
+    back the clouds.
+    """
+    rows = []
+    with open(path) as f:
+        header = f.readline()
+        del header
+        for line in f:
+            parts = line.strip().split(",")
+            if len(parts) < n_regions + 2:
+                continue
+            rows.append([float(x) for x in parts[1 : n_regions + 2]])
+    table = np.asarray(rows, np.float32)
+    return TableCarbonSource(table=table)
+
+
+def materialize(source, T: int, key: Array | None = None) -> np.ndarray:
+    """Renders any source to a [T, N+1] table (useful for plots/benches)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def one(t):
+        Ce, Cc = source(t, key)
+        return jnp.concatenate([Ce[None], Cc])
+
+    return np.asarray(jax.vmap(one)(jnp.arange(T)))

@@ -1,0 +1,86 @@
+"""Drift-plus-penalty machinery (paper §IV.A, Lemma 1).
+
+Per-slot surrogate coefficients:
+
+  b[m,n] = V*Ce*pe[m]     + Qc[m,n] - Qe[m]   (dispatch coefficient)
+  c[m,n] = V*Cc[n]*pc[m,n] - Qc[m,n]          (processing coefficient)
+
+Minimizing (19) == min sum b*d + sum c*w subject to the energy knapsacks
+(12)-(14). These helpers are shared by the policies, the exact-knapsack
+oracle and the Lemma-1 property tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.queueing import Action, NetworkSpec, NetworkState, emissions, lyapunov, step
+
+Array = jax.Array
+
+
+def dispatch_scores(
+    state: NetworkState, spec_pe: Array, Ce: Array, V: Array
+) -> Array:
+    """b[m,n] for all (m,n). spec_pe: [M]; Ce scalar."""
+    return V * Ce * spec_pe[:, None] + state.Qc - state.Qe[:, None]
+
+
+def processing_scores(
+    state: NetworkState, spec_pc: Array, Cc: Array, V: Array
+) -> Array:
+    """c[m,n] for all (m,n). spec_pc: [M,N]; Cc: [N]."""
+    return V * Cc[None, :] * spec_pc - state.Qc
+
+
+def surrogate_value(
+    state: NetworkState,
+    spec: NetworkSpec,
+    action: Action,
+    Ce: Array,
+    Cc: Array,
+    V: Array,
+) -> Array:
+    """Objective (19) evaluated at an action."""
+    pe, pc, _, _ = spec.as_arrays()
+    b = dispatch_scores(state, pe, Ce, V)
+    c = processing_scores(state, pc, Cc, V)
+    return jnp.sum(b * action.d) + jnp.sum(c * action.w)
+
+
+def drift_plus_penalty(
+    state: NetworkState,
+    spec: NetworkSpec,
+    action: Action,
+    arrivals: Array,
+    Ce: Array,
+    Cc: Array,
+    V: Array,
+) -> Array:
+    """Exact Delta(t) + V*C(t) for one realized transition (LHS of (17))."""
+    nxt = step(state, action, arrivals)
+    return (lyapunov(nxt) - lyapunov(state)) + V * emissions(
+        spec, action, Ce, Cc
+    )
+
+
+def lemma1_rhs(
+    state: NetworkState,
+    spec: NetworkSpec,
+    action: Action,
+    arrivals: Array,
+    Ce: Array,
+    Cc: Array,
+    V: Array,
+    B: Array,
+) -> Array:
+    """RHS of the Lemma-1 bound (17)."""
+    pe, pc, _, _ = spec.as_arrays()
+    b = dispatch_scores(state, pe, Ce, V)
+    c = processing_scores(state, pc, Cc, V)
+    return (
+        B
+        + jnp.sum(state.Qe * arrivals)
+        + jnp.sum(b * action.d)
+        + jnp.sum(c * action.w)
+    )

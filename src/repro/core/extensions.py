@@ -1,0 +1,113 @@
+"""Beyond-paper scheduling extensions.
+
+* OraclePolicy     -- clairvoyant lower-bound: sees the whole carbon
+  future and processes each arrival in the greenest feasible future slot
+  (computed offline by sorting slots by intensity). Not implementable
+  online; used to measure how much of the achievable reduction the
+  paper's online policy captures.
+* ThresholdPolicy  -- the naive carbon heuristic (process only when
+  CI < threshold, ignore queues): what operators do without the
+  drift-plus-penalty machinery. Ablation baseline.
+* AdaptiveVController -- closed-loop V tuning: Theorem 1 trades
+  emissions (B/V) against queue growth (O(V)); this controller walks V
+  multiplicatively to hold total backlog at a target, removing the
+  hand-tuning the paper leaves open.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policies import CarbonIntensityPolicy, QueueLengthPolicy
+from repro.core.queueing import Action, NetworkSpec, NetworkState
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdPolicy:
+    """Process greedily whenever the cloud's CI is below `threshold`;
+    dispatch like the queue-length policy. Carbon-aware but queue-blind:
+    no stability guarantee (see tests for the failure mode)."""
+
+    threshold: float = 200.0
+
+    def __call__(self, state, spec, Ce, Cc, arrivals, key=None):
+        base = QueueLengthPolicy()(state, spec, Ce, Cc, arrivals, key)
+        gate = (Cc < self.threshold).astype(jnp.float32)[None, :]
+        return Action(d=base.d, w=base.w * gate)
+
+
+def oracle_emissions_for_work(
+    spec: NetworkSpec,
+    carbon_table: np.ndarray,  # [T, N+1] (edge, clouds)
+    edge_energy: float,        # total edge kWh the policy actually spent
+    cloud_energy: np.ndarray | float,  # total cloud kWh spent (sum or [N])
+) -> float:
+    """Clairvoyant lower bound on the emissions of doing the SAME amount
+    of work: spend `edge_energy` in the globally cheapest edge slots
+    (budget Pe each) and `cloud_energy` in the cheapest (slot, cloud)
+    cells (budget Pc[n] each). Relaxations vs any feasible schedule --
+    fractional tasks, no arrival-time constraints, free cloud choice --
+    only lower the cost, so lb <= any policy's emissions for equal work.
+    """
+    T = carbon_table.shape[0]
+    Pe = float(spec.Pe)
+    Pc = np.asarray(spec.Pc, np.float64)
+
+    total = 0.0
+    # edge: cheapest slots first
+    edge_ci = np.sort(carbon_table[:, 0].astype(np.float64))
+    remaining = float(edge_energy)
+    for ci in edge_ci:
+        take = min(Pe, remaining)
+        total += ci * take
+        remaining -= take
+        if remaining <= 0:
+            break
+    total += max(remaining, 0.0) * float(edge_ci[-1])
+
+    # clouds: cheapest (slot, cloud) cells first
+    cloud_ci = carbon_table[:, 1:].astype(np.float64)  # [T, N]
+    cells = [(cloud_ci[s, n], Pc[n]) for s in range(T)
+             for n in range(cloud_ci.shape[1])]
+    cells.sort()
+    remaining = float(np.sum(cloud_energy))
+    for ci, cap in cells:
+        take = min(cap, remaining)
+        total += ci * take
+        remaining -= take
+        if remaining <= 0:
+            break
+    total += max(remaining, 0.0) * float(cells[-1][0])
+    return float(total)
+
+
+@dataclasses.dataclass
+class AdaptiveVController:
+    """Multiplicative V feedback: hold total backlog near `target_backlog`.
+
+    backlog > target * (1+band)  ->  V /= step   (drain queues)
+    backlog < target * (1-band)  ->  V *= step   (chase carbon harder)
+    Clamped to [v_min, v_max]. One update per slot; the policy object is
+    rebuilt cheaply (pure dataclass)."""
+
+    target_backlog: float
+    V: float = 0.05
+    step: float = 1.15
+    band: float = 0.25
+    v_min: float = 1e-4
+    v_max: float = 10.0
+
+    def update(self, backlog: float) -> float:
+        if backlog > self.target_backlog * (1 + self.band):
+            self.V = max(self.V / self.step, self.v_min)
+        elif backlog < self.target_backlog * (1 - self.band):
+            self.V = min(self.V * self.step, self.v_max)
+        return self.V
+
+    def policy(self) -> CarbonIntensityPolicy:
+        return CarbonIntensityPolicy(V=self.V)

@@ -1,0 +1,132 @@
+"""Knapsack oracles for the per-slot surrogate (19).
+
+The paper shows minimizing (19) decouples into one unbounded knapsack per
+resource (edge / each cloud), NP-hard in general. For validation we
+provide:
+
+  * exact_knapsack_min_py -- exact bounded-knapsack DP in numpy over an
+    integral energy grid (weights rounded to a resolution). Ground truth
+    for small instances.
+  * bounded_knapsack_min  -- the same DP in fixed-shape JAX (scan over
+    item types, vectorized over the budget grid), jit-able; used by
+    ExactDPPPolicy.
+
+Items: take x_m in {0..cap_m} of type m, cost weight_m * x_m energy,
+value score_m * x_m; minimize total value subject to energy <= budget.
+Only negative scores can help, so positives are dropped up front.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def exact_knapsack_min_py(
+    scores, weights, caps, budget, resolution: int = 2048
+):
+    """Exact bounded knapsack (minimization) on a discretized energy grid.
+
+    Returns (counts [M], value). Weights are scaled so that `budget`
+    maps to `resolution` grid cells; weights round UP (conservative:
+    never violates the true budget).
+    """
+    scores = np.asarray(scores, np.float64)
+    weights = np.asarray(weights, np.float64)
+    caps = np.asarray(caps, np.float64)
+    budget = float(budget)
+    M = len(scores)
+    if budget <= 0:
+        return np.zeros(M), 0.0
+    scale = resolution / budget
+    iw = np.maximum(np.ceil(weights * scale - 1e-9).astype(int), 1)
+    best = np.zeros(resolution + 1)  # best value at each used-energy level
+    choice = [dict() for _ in range(resolution + 1)]
+    # Bounded knapsack via binary splitting of counts.
+    items = []  # (score, weight, type, multiplicity)
+    for m in range(M):
+        if scores[m] >= 0:
+            continue
+        cap = int(min(caps[m], budget // weights[m] if weights[m] > 0 else 0))
+        k = 1
+        while cap > 0:
+            take = min(k, cap)
+            items.append((scores[m] * take, iw[m] * take, m, take))
+            cap -= take
+            k *= 2
+    for val, w, m, mult in items:
+        if w > resolution:
+            continue
+        for e in range(resolution, w - 1, -1):
+            cand = best[e - w] + val
+            if cand < best[e] - 1e-12:
+                best[e] = cand
+                choice[e] = dict(choice[e - w])
+                choice[e][m] = choice[e].get(m, 0) + mult
+    e_star = int(np.argmin(best))
+    counts = np.zeros(M)
+    for m, c in choice[e_star].items():
+        counts[m] = c
+    return counts, float(best[e_star])
+
+
+def bounded_knapsack_min(
+    scores: Array, weights: Array, caps: Array, budget: Array, grid: int = 512
+) -> Array:
+    """Fixed-shape JAX bounded-knapsack DP (minimization).
+
+    DP over an energy grid of `grid` cells; scan over item types, inner
+    scan over that type's binary-split copies. Returns fractional-free
+    integer counts [M]. Exact up to the grid discretization (weights
+    rounded up), so the result is always feasible w.r.t. the true budget.
+    """
+    scores = scores.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+    caps = caps.astype(jnp.float32)
+    budget = jnp.maximum(budget.astype(jnp.float32), 1e-6)
+    M = scores.shape[0]
+    scale = grid / budget
+    iw = jnp.maximum(jnp.ceil(weights * scale - 1e-6), 1.0).astype(jnp.int32)
+    cap = jnp.where(
+        scores < 0,
+        jnp.minimum(caps, jnp.floor(budget / jnp.maximum(weights, 1e-9))),
+        0.0,
+    ).astype(jnp.int32)
+
+    # Binary splitting: max cap bounded by grid (can't fit more than grid
+    # copies of weight>=1 items) -> at most ceil(log2(grid))+1 splits.
+    n_splits = int(np.ceil(np.log2(grid))) + 1
+
+    # best[e] = min value using exactly <= e grid-energy; track counts.
+    best0 = jnp.zeros((grid + 1,), jnp.float32)
+    cnt0 = jnp.zeros((grid + 1, M), jnp.float32)
+
+    def item_body(carry, m):
+        best, cnt = carry
+
+        def split_body(carry2, s):
+            best, cnt, remaining = carry2
+            k = jnp.minimum(2**s, remaining).astype(jnp.float32)
+            valid = k > 0
+            w = (iw[m].astype(jnp.float32) * k).astype(jnp.int32)
+            val = scores[m] * k
+            e = jnp.arange(grid + 1)
+            src = jnp.clip(e - w, 0, grid)
+            cand = jnp.where((e >= w) & valid, best[src] + val, jnp.inf)
+            better = cand < best - 1e-9
+            new_best = jnp.where(better, cand, best)
+            src_cnt = cnt[src] + jnp.zeros((grid + 1, M)).at[:, m].set(k)
+            new_cnt = jnp.where(better[:, None], src_cnt, cnt)
+            remaining = remaining - k.astype(jnp.int32)
+            return (new_best, new_cnt, remaining), None
+
+        (best, cnt, _), _ = jax.lax.scan(
+            split_body, (best, cnt, cap[m]), jnp.arange(n_splits)
+        )
+        return (best, cnt), None
+
+    (best, cnt), _ = jax.lax.scan(item_body, (best0, cnt0), jnp.arange(M))
+    e_star = jnp.argmin(best)
+    return cnt[e_star]

@@ -1,0 +1,158 @@
+"""Queueing-network simulator (paper §V numerical analysis).
+
+A single `lax.scan` over time slots: observe carbon intensity + arrivals,
+act with the policy, account emissions (eq. 5), step the dynamics
+(eqs. 7-8). Fully jittable; `simulate_vsweep` vmaps the whole simulation
+over a vector of V values (beyond-paper: the paper's Figs. 2/4 tradeoff
+curve computed in one compiled call).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.queueing import (
+    Action,
+    NetworkSpec,
+    NetworkState,
+    emissions,
+    init_state,
+    step,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformArrivals:
+    """a_m(t) ~ U{0..amax} i.i.d. (paper §V uses amax=400)."""
+
+    M: int
+    amax: int = 400
+
+    def __call__(self, t: Array, key: Array) -> Array:
+        k = jax.random.fold_in(key, t)
+        return jax.random.randint(k, (self.M,), 0, self.amax + 1).astype(
+            jnp.float32
+        )
+
+    @property
+    def a_max(self) -> float:
+        return float(self.amax)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals:
+    """a_m(t) ~ Poisson(rate_m), clipped at `clip` to keep a_m bounded
+    (Lemma 1 requires bounded arrivals)."""
+
+    rates: tuple
+    clip: int = 2000
+
+    def __call__(self, t: Array, key: Array) -> Array:
+        k = jax.random.fold_in(key, t)
+        lam = jnp.asarray(self.rates, jnp.float32)
+        return jnp.minimum(
+            jax.random.poisson(k, lam).astype(jnp.float32), float(self.clip)
+        )
+
+    @property
+    def a_max(self) -> float:
+        return float(self.clip)
+
+
+class SimResult(NamedTuple):
+    emissions: Array      # [T] per-slot carbon emissions C(t)
+    cum_emissions: Array  # [T] cumulative sum
+    Qe: Array             # [T, M] edge queue trajectory (post-step)
+    Qc: Array             # [T, M, N] cloud queue trajectory (post-step)
+    dispatched: Array     # [T] total tasks dispatched
+    processed: Array      # [T] total tasks processed
+    energy_edge: Array    # [T] edge energy spent
+    energy_cloud: Array   # [T, N] cloud energy spent
+
+    @property
+    def final_backlog(self) -> Array:
+        return self.Qe[-1].sum() + self.Qc[-1].sum()
+
+
+def simulate(
+    policy: Callable,
+    spec: NetworkSpec,
+    carbon_source: Callable,
+    arrival_source: Callable,
+    T: int,
+    key: Array,
+    state0: NetworkState | None = None,
+) -> SimResult:
+    """Runs the network for T slots under `policy`."""
+    pe, pc, _, _ = spec.as_arrays()
+    if state0 is None:
+        state0 = init_state(spec.M, spec.N)
+    k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
+
+    def body(state, t):
+        Ce, Cc = carbon_source(t, k_carbon)
+        a = arrival_source(t, k_arrive)
+        act: Action = policy(
+            state, spec, Ce, Cc, a, jax.random.fold_in(k_policy, t)
+        )
+        C_t = emissions(spec, act, Ce, Cc)
+        nxt = step(state, act, a)
+        out = (
+            C_t,
+            nxt.Qe,
+            nxt.Qc,
+            jnp.sum(act.d),
+            jnp.sum(act.w),
+            jnp.sum(act.d * pe[:, None]),
+            jnp.sum(act.w * pc, axis=0),
+        )
+        return nxt, out
+
+    _, (C, Qe, Qc, disp, proc, ee, ec) = jax.lax.scan(
+        body, state0, jnp.arange(T)
+    )
+    return SimResult(
+        emissions=C,
+        cum_emissions=jnp.cumsum(C),
+        Qe=Qe,
+        Qc=Qc,
+        dispatched=disp,
+        processed=proc,
+        energy_edge=ee,
+        energy_cloud=ec,
+    )
+
+
+def simulate_vsweep(
+    make_policy: Callable[[Array], Callable],
+    Vs: Array,
+    spec: NetworkSpec,
+    carbon_source: Callable,
+    arrival_source: Callable,
+    T: int,
+    key: Array,
+) -> SimResult:
+    """vmaps the full simulation over a vector of V values.
+
+    `make_policy(V)` must build a policy whose only V-dependence flows
+    through traced arithmetic (CarbonIntensityPolicy qualifies).
+    """
+
+    def one(V):
+        return simulate(
+            make_policy(V), spec, carbon_source, arrival_source, T, key
+        )
+
+    return jax.vmap(one)(jnp.asarray(Vs, jnp.float32))
+
+
+def mean_rate_stability_metric(result: SimResult) -> Array:
+    """E[Q(T)]/T proxy for (10)-(11): total terminal backlog over horizon.
+    A mean-rate-stable system drives this toward 0 as T grows."""
+    T = result.emissions.shape[0]
+    return result.final_backlog / T

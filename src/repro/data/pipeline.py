@@ -1,0 +1,104 @@
+"""Deterministic synthetic data pipeline.
+
+Production trainers stream tokenized shards; offline we generate
+reproducible token streams with a counter-based PRNG so that (a) every
+host/shard slices the same logical stream without coordination, (b)
+checkpoint-restart resumes mid-stream bit-exactly (the step index IS the
+cursor), and (c) each task type (architecture) gets an independent stream.
+
+Also provides the task-arrival processes that feed the GreenOrchestrator
+(the a_m(t) of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    """Infinite synthetic LM stream: batch(step) is a pure function."""
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # markov-ish structure so losses are learnable, not pure noise
+    n_patterns: int = 64
+    pattern_len: int = 16
+
+    def batch(self, step: int) -> Dict[str, Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        B, S = self.global_batch, self.seq_len
+        # each sequence interleaves a repeated pattern with noise tokens:
+        # next-token prediction has signal (the repeats) => loss decreases.
+        pat_ids = jax.random.randint(k1, (B, 1), 0, self.n_patterns)
+        base = jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), 0),
+            (self.n_patterns, self.pattern_len), 0, self.vocab_size,
+        )
+        reps = (S + self.pattern_len - 1) // self.pattern_len
+        pattern = jnp.tile(base[pat_ids[:, 0]], (1, reps))[:, :S]
+        noise = jax.random.randint(k2, (B, S), 0, self.vocab_size)
+        is_noise = jax.random.bernoulli(k3, 0.15, (B, S))
+        tokens = jnp.where(is_noise, noise, pattern).astype(jnp.int32)
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.full((B, 1), -1, jnp.int32)], axis=1
+        )
+        return {"tokens": tokens, "labels": labels}
+
+    def shard_for_host(self, batch: Dict[str, Array], host: int,
+                       n_hosts: int) -> Dict[str, Array]:
+        assert self.global_batch % n_hosts == 0
+        per = self.global_batch // n_hosts
+        return jax.tree.map(lambda x: x[host * per : (host + 1) * per], batch)
+
+
+def make_batch_fn(cfg, seq_len: int, global_batch: int, seed: int = 0):
+    """Batch function for any architecture family (stub frontends get
+    random embeddings, consistent with input_specs)."""
+    stream = TokenStream(cfg.vocab_size, seq_len, global_batch, seed)
+
+    def batch(step: int) -> Dict[str, Array]:
+        b = stream.batch(step)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 7), step)
+        if cfg.is_encoder_decoder:
+            frames = jax.random.normal(
+                key, (global_batch, cfg.source_len, cfg.d_model),
+                jnp.float32,
+            ) * 0.02
+            return {"frames": frames, "tokens": b["tokens"],
+                    "labels": b["labels"]}
+        if cfg.family == "vlm":
+            s_text = seq_len - cfg.prefix_len
+            patches = jax.random.normal(
+                key, (global_batch, cfg.prefix_len, cfg.d_model), jnp.float32
+            ) * 0.02
+            return {
+                "patches": patches,
+                "tokens": b["tokens"][:, :s_text],
+                "labels": b["labels"][:, :s_text],
+            }
+        return b
+
+    return batch
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskArrivals:
+    """a_m(t) ~ U{0..amax} (paper §V) over M task types; pure in (seed,t)."""
+
+    M: int
+    amax: int = 400
+    seed: int = 0
+
+    def __call__(self, t: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, t))
+        return rng.integers(0, self.amax + 1, self.M).astype(np.float32)

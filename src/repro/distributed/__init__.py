@@ -1,0 +1,1 @@
+from repro.distributed.api import activation_rules, shard_hint

@@ -1,0 +1,55 @@
+"""Ambient sharding-hint API.
+
+Model code calls `shard_hint(x, name)` at key activation sites. On a bare
+CPU (tests, smoke runs) this is a no-op. The distributed launcher installs
+a rule table {name -> PartitionSpec} via `activation_rules(...)`, after
+which hints lower to with_sharding_constraint -- keeping model math 100%
+layout-agnostic while the runtime owns placement.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, "jax.sharding.PartitionSpec"]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: Dict[str, "jax.sharding.PartitionSpec"],
+                     mesh=None, dp_axes=None, ep_axis: str = "model"):
+    """Installs activation-sharding rules and (optionally) the mesh
+    context that enables explicitly-collective layers (shard_map MoE)."""
+    prev = _rules()
+    prev_mesh = mesh_context()
+    _state.rules = rules
+    _state.mesh = (mesh, tuple(dp_axes or ()), ep_axis) if mesh is not None \
+        else None
+    try:
+        yield
+    finally:
+        _state.rules = prev
+        _state.mesh = prev_mesh
+
+
+def mesh_context():
+    """Returns (mesh, dp_axes, ep_axis) or None."""
+    return getattr(_state, "mesh", None)
+
+
+def shard_hint(x: jax.Array, name: str) -> jax.Array:
+    rules = _rules()
+    if not rules or name not in rules:
+        return x
+    sharding = rules[name]
+    # Only rank must match; XLA pads non-divisible shardings.
+    pspec = getattr(sharding, "spec", sharding)
+    if len(pspec) > x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)

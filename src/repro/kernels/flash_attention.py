@@ -1,0 +1,140 @@
+"""Flash attention Pallas TPU kernel (GQA, causal / prefix-LM / full).
+
+Canonical TPU-native tiling:
+  grid = (B, H, Sq/bq, Skv/bk), dimension_semantics =
+  (parallel, parallel, parallel, arbitrary) -- the kv dimension is the
+  innermost sequential loop; online-softmax accumulators (m, l, acc) live
+  in VMEM scratch and persist across kv steps.
+
+Block shapes are MXU-aligned: bq, bk multiples of 128 (clamped to the
+sequence), head_dim padded by the caller to a multiple of 128 if needed.
+GQA is expressed in the index_map: query head h reads kv head h*K//H, so
+K/V blocks are fetched once per kv-head group without materializing the
+head broadcast in HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,  # [1,1,bq,hd], [1,1,bk,hd], [1,1,bk,hd]
+    o_ref,                # [1,1,bq,hd]
+    m_ref, l_ref, acc_ref,  # VMEM scratch [bq,1], [bq,1], [bq,hd]
+    *, mask_mode: str, prefix_len: int, bq: int, bk: int, nk: int,
+    scale: float,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q * scale, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [bq, bk]
+
+    iq = pl.program_id(2)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    if mask_mode == "causal":
+        mask = k_pos <= q_pos
+    elif mask_mode == "prefix":
+        mask = (k_pos <= q_pos) | (k_pos < prefix_len)
+    else:
+        mask = None
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [bq,1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # [bq,bk]
+    alpha = jnp.exp(m_prev - m_new)  # [bq,1]
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0, ...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mask_mode", "prefix_len", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, H, Sq, hd]
+    k: jax.Array,  # [B, K, Skv, hd]
+    v: jax.Array,  # [B, K, Skv, hd]
+    *,
+    mask_mode: str = "causal",
+    prefix_len: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    assert H % K == 0
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    grid = (B, H, nq, nk)
+    kern = functools.partial(
+        _kernel, mask_mode=mask_mode, prefix_len=prefix_len,
+        bq=bq, bk=bk, nk=nk, scale=scale,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, hd),
+                lambda b, h, iq, ik, K=K, H=H: (b, h * K // H, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, hd),
+                lambda b, h, iq, ik, K=K, H=H: (b, h * K // H, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

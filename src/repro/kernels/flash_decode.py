@@ -1,0 +1,120 @@
+"""Flash-decode Pallas TPU kernel: single-query GQA attention over a long
+KV cache (the decode_32k / long_500k hot loop).
+
+Decode attention is bandwidth-bound: one query reads the entire cache.
+The kernel streams K/V blocks through VMEM once, maintaining online
+max/sum accumulators per (batch, head) -- the same partial-softmax
+combination the sequence-sharded cache path uses across devices, here
+applied across cache blocks within a device.
+
+Layout: q [B, H, hd], k/v [B, S, K, hd], valid length `pos+1` masked via
+iota against a scalar-prefetched position. Grid = (B, K, S/bs) with the
+cache-block dimension innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    pos_ref,                    # SMEM scalar prefetch: valid length - 1
+    q_ref, k_ref, v_ref,        # [1,1,G,hd], [1,bs,1,hd], [1,bs,1,hd]
+    o_ref,                      # [1,1,G,hd]
+    m_ref, l_ref, acc_ref,      # VMEM scratch [G,1], [G,1], [G,hd]
+    *, bs: int, ns: int, scale: float,
+):
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [G, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)    # [bs, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q * scale, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # [G, bs]
+    kv_pos = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(kv_pos <= pos_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ib == ns - 1)
+    def _finish():
+        o_ref[0, 0, ...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(
+    q: jax.Array,    # [B, H, hd] single-position queries
+    k: jax.Array,    # [B, S, K, hd] cache keys (rotated)
+    v: jax.Array,    # [B, S, K, hd]
+    pos: jax.Array,  # scalar int32: last valid cache index (inclusive)
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns [B, H, hd] attention outputs over cache[:pos+1]."""
+    B, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    assert H % K == 0
+    G = H // K
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    ns = S // bs
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, K, G, hd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, kh, ib, pos: (b, kh, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, kh, ib, pos: (b, ib, kh, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, kh, ib, pos: (b, ib, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, hd), lambda b, kh, ib, pos: (b, kh, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, ns=ns, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_decode",
+    )(jnp.asarray(pos, jnp.int32).reshape(1), qg, k, v)
+    return out.reshape(B, H, hd)

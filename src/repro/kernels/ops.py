@@ -1,0 +1,59 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the real kernels run; everywhere else (this CPU container) they
+execute in Pallas interpret mode when `interpret=None` (auto) resolves to
+True. The contracts match kernels/ref.py exactly (see tests/test_kernels.py
+shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import carbon_score, flash_attention as fa, ssd_chunk
+from repro.kernels import ref
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, mask_mode="causal", prefix_len=0,
+                    bq=128, bk=128, interpret=None):
+    return fa.flash_attention(
+        q, k, v, mask_mode=mask_mode, prefix_len=prefix_len,
+        bq=bq, bk=bk, interpret=_auto_interpret(interpret),
+    )
+
+
+def ssd_chunk_intra(a, x, Bm, Cm, *, block_heads=8, interpret=None):
+    return ssd_chunk.ssd_chunk_intra(
+        a, x, Bm, Cm, block_heads=block_heads,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+def carbon_scores(Qc, pc, Qe, pe, Cc, V_Ce, *, block_m=256, block_n=256,
+                  interpret=None):
+    return carbon_score.carbon_scores(
+        Qc, pc, Qe, pe, Cc, V_Ce, block_m=block_m, block_n=block_n,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+# re-export oracles for convenience
+flash_attention_ref = ref.flash_attention_ref
+ssd_chunk_intra_ref = ref.ssd_chunk_intra_ref
+carbon_scores_ref = ref.carbon_scores_ref
+
+
+def flash_decode(q, k, v, pos, *, block_s=512, interpret=None):
+    from repro.kernels import flash_decode as fd
+
+    return fd.flash_decode(
+        q, k, v, pos, block_s=block_s, interpret=_auto_interpret(interpret)
+    )
+
+
+flash_decode_ref = ref.flash_decode_ref

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (same contracts, no tiling)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, H, Sq, hd]
+    k: jax.Array,  # [B, K, Skv, hd]
+    v: jax.Array,
+    *,
+    mask_mode: str = "causal",
+    prefix_len: int = 0,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    if mask_mode == "causal":
+        mask = kpos <= qpos
+    elif mask_mode == "prefix":
+        mask = (kpos <= qpos) | (kpos < prefix_len)
+    else:
+        mask = jnp.ones((Sq, Skv), bool)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def ssd_chunk_intra_ref(a, x, Bm, Cm):
+    """a [B,nc,l,H]; x [B,nc,l,H,P]; Bm/Cm [B,nc,l,N] ->
+    (y_diag [B,nc,l,H,P], S_c [B,nc,H,N,P], total [B,nc,H])."""
+    a = a.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    l = a.shape[2]
+    ci = jnp.cumsum(a, axis=2)
+    diff = ci[:, :, :, None, :] - ci[:, :, None, :, :]  # [B,nc,l,l,H]
+    tril = jnp.tril(jnp.ones((l, l), bool))
+    Lmat = jnp.where(tril[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)
+    y = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, Lmat, x)
+    decay_end = jnp.exp(ci[:, :, -1:, :] - ci)
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bm, decay_end, x)
+    total = jnp.exp(ci[:, :, -1, :])
+    return y, S_c, total
+
+
+def carbon_scores_ref(Qc, pc, Qe, pe, Cc, V_Ce):
+    """-> (c_scores [M,N], n1 [M] int32, b [M])."""
+    Qc = Qc.astype(jnp.float32)
+    c = Cc[None, :].astype(jnp.float32) * pc.astype(jnp.float32) - Qc
+    n1 = jnp.argmin(Qc, axis=1).astype(jnp.int32)
+    qmin = jnp.min(Qc, axis=1)
+    b = V_Ce * pe.astype(jnp.float32) + qmin - Qe.astype(jnp.float32)
+    return c, n1, b
+
+
+def flash_decode_ref(q, k, v, pos):
+    """q [B,H,hd]; k/v [B,S,K,hd]; attend over cache[:pos+1]."""
+    B, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.reshape(B, K, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, kf)
+    valid = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, vf)
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,102 @@
+"""Mamba-2 SSD intra-chunk Pallas TPU kernel.
+
+Computes, for each (batch, chunk, head-block):
+  y_diag [l, bh, P] -- intra-chunk causal contribution
+  S_c    [bh, N, P] -- the chunk's contribution to the running state
+  total  [bh]       -- decay across the whole chunk
+The cheap inter-chunk recurrence (a linear scan over nc chunk states) and
+the off-diagonal output term stay in XLA (see models/mamba2.ssd_chunked);
+this kernel replaces the two big quadratic einsums whose Lmat
+[B,nc,H,l,l] materialization dominates the memory-bound term.
+
+VMEM budget per grid step (l=256, bh=8, P=64, N=128, fp32):
+  xc 0.5MB + L 2MB + scores 0.25MB + y 0.5MB + S_c 0.25MB  << 16MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, b_ref, c_ref,        # [1,1,l,bh] [1,1,l,bh,P] [1,1,l,N] [1,1,l,N]
+            y_ref, s_ref, tot_ref):            # [1,1,l,bh,P] [1,1,bh,N,P] [1,1,bh]
+    a = a_ref[0, 0].astype(jnp.float32)        # [l, bh]
+    x = x_ref[0, 0].astype(jnp.float32)        # [l, bh, P]
+    Bm = b_ref[0, 0].astype(jnp.float32)       # [l, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)       # [l, N]
+    l = a.shape[0]
+
+    ci = jnp.cumsum(a, axis=0)                 # [l, bh]
+    # scores[i,j] = C_i . B_j  (shared across heads)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )                                          # [l, l]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    tril = ii >= jj
+
+    # per-head decay matrix L[h,i,j] = exp(ci[i,h] - ci[j,h]) on i>=j
+    diff = ci[:, None, :] - ci[None, :, :]     # [l, l, bh]
+    Lmat = jnp.where(tril[..., None], jnp.exp(diff), 0.0)
+    w = scores[..., None] * Lmat               # [l, l, bh]
+    # y[i,h,p] = sum_j w[i,j,h] * x[j,h,p]
+    y = jnp.einsum("ijh,jhp->ihp", w, x, preferred_element_type=jnp.float32)
+    y_ref[0, 0, ...] = y.astype(y_ref.dtype)
+
+    decay_end = jnp.exp(ci[-1:, :] - ci)       # [l, bh]
+    xw = x * decay_end[..., None]              # [l, bh, P]
+    s_c = jnp.einsum("jn,jhp->hnp", Bm, xw,
+                     preferred_element_type=jnp.float32)
+    s_ref[0, 0, ...] = s_c.astype(s_ref.dtype)
+    tot_ref[0, 0, ...] = jnp.exp(ci[-1, :]).astype(tot_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_heads", "interpret")
+)
+def ssd_chunk_intra(
+    a: jax.Array,   # [B, nc, l, H] log-decays (dt*A)
+    x: jax.Array,   # [B, nc, l, H, P] dt-weighted inputs
+    Bm: jax.Array,  # [B, nc, l, N]
+    Cm: jax.Array,  # [B, nc, l, N]
+    *,
+    block_heads: int = 8,
+    interpret: bool = False,
+):
+    """Returns (y_diag [B,nc,l,H,P], S_c [B,nc,H,N,P], total [B,nc,H])."""
+    B, nc, l, H = a.shape
+    P = x.shape[-1]
+    N = Bm.shape[-1]
+    bh = min(block_heads, H)
+    assert H % bh == 0
+    nh = H // bh
+    grid = (B, nc, nh)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, l, bh), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, l, bh, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, l, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, l, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, bh, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, bh, N, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, bh), lambda b, c, h: (b, c, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, l, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+        name="ssd_chunk_intra",
+    )(a, x, Bm, Cm)

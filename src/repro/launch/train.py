@@ -1,0 +1,83 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1_5_0_5b \
+      --smoke --steps 50 --seq-len 256 --batch 8 --ckpt-dir /tmp/ckpt
+
+Runs a real training loop on whatever devices exist, with
+checkpoint/restart: re-launching with the same --ckpt-dir resumes from
+the latest step. On a TPU pod slice the same step function is lowered
+with the production-mesh shardings by repro.launch.dryrun's helpers.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import registry
+from repro.data.pipeline import make_batch_fn
+from repro.models import build_model
+from repro.optim.adamw import AdamW, cosine_schedule, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = (registry.get_smoke_config(args.arch) if args.smoke
+           else registry.get_config(args.arch))
+    model = build_model(cfg)
+    opt = AdamW(lr=cosine_schedule(args.lr, args.warmup, args.steps))
+    train_step = jax.jit(make_train_step(model, opt))
+    batch_fn = make_batch_fn(cfg, args.seq_len, args.batch)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    start = 0
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and ckpt.latest_step() is not None:
+        tree, start, _ = ckpt.restore(
+            {"params": params, "opt": opt_state}
+        )
+        params, opt_state = tree["params"], tree["opt"]
+        print(f"resumed from step {start}")
+
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = batch_fn(step)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state},
+                      blocking=False)
+    if ckpt:
+        ckpt.save(args.steps, {"params": params, "opt": opt_state})
+        ckpt.wait()
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

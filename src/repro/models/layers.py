@@ -1,0 +1,324 @@
+"""Transformer building blocks: norms, RoPE, chunked (flash-style) GQA
+attention, gated MLPs. Pure functional JAX; params are plain dict pytrees
+stacked along the layer axis for lax.scan.
+
+Sharding is decoupled from model math: `shard_hint(x, name)` applies a
+with_sharding_constraint only when the distributed runtime installed
+activation rules (see repro/distributed/api.py); on CPU tests it is a
+no-op.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import shard_hint
+
+Array = jax.Array
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(key, d, kind: str, dtype):
+    del key
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p, x: Array, kind: str, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings (partial-rotary supported, glm4 style)
+# --------------------------------------------------------------------------
+
+def rope_angles(positions: Array, rot_dim: int, theta: float) -> tuple:
+    """positions [*, S] -> (cos, sin) with shape [*, S, rot_dim/2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array, fraction: float) -> Array:
+    """x: [B, S, H, hd]; cos/sin: [B, S, rot/2] or [S, rot/2]."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    if cos.ndim == 2:  # [S, rot/2]
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # [B, S, rot/2]
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2, xp], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(S: int, d: int) -> Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d)
+    )
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, chunked over queries -- flash-style memory profile)
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, K, hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, K, hd), dtype=dtype),
+        "wo": dense_init(
+            ks[3], (H, hd, d), scale=1.0 / math.sqrt(H * hd * 2 * cfg.n_layers),
+            dtype=dtype,
+        ),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((K, hd), dtype)
+        p["bv"] = jnp.zeros((K, hd), dtype)
+    return p
+
+
+def _mask_value(dtype):
+    return jnp.finfo(jnp.float32).min / 2
+
+
+def attention_scores_chunked(
+    q: Array,  # [B, Sq, K, G, hd] grouped queries
+    k: Array,  # [B, Skv, K, hd]
+    v: Array,  # [B, Skv, K, hd]
+    *,
+    mask_mode: str,  # "causal" | "prefix" | "full"
+    q_offset: Array | int,  # absolute position of q[0]
+    prefix_len: int = 0,
+    chunk: int = 1024,
+    unroll: bool = False,
+) -> Array:
+    """Exact attention computed in query chunks: peak memory O(chunk*Skv)
+    instead of O(Sq*Skv). Equivalent to flash attention at the XLA level;
+    the Pallas kernel (kernels/flash_attention.py) implements the same
+    contract for TPU."""
+    B, Sq, K, G, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, Sq)
+    n_chunks = (Sq + chunk - 1) // chunk
+    pad = n_chunks * chunk - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qc = q.reshape(B, n_chunks, chunk, K, G, hd)
+    kv_pos = jnp.arange(Skv)
+
+    def one_chunk(carry, inputs):
+        ci, q_blk = inputs  # q_blk [B, chunk, K, G, hd]
+        q_pos = q_offset + ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bqkgh,bskh->bkgqs", q_blk.astype(jnp.float32) * scale,
+            k.astype(jnp.float32),
+        )  # [B, K, G, chunk, Skv]
+        if mask_mode == "causal":
+            m = kv_pos[None, :] <= q_pos[:, None]
+        elif mask_mode == "prefix":
+            m = (kv_pos[None, :] <= q_pos[:, None]) | (
+                kv_pos[None, :] < prefix_len
+            )
+        else:
+            m = jnp.ones((chunk, Skv), bool)
+        s = jnp.where(m[None, None, None], s, _mask_value(s.dtype))
+        p = jax.nn.softmax(s, axis=-1)
+        y = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+        return carry, y.astype(v.dtype)
+
+    _, ys = jax.lax.scan(
+        one_chunk, None, (jnp.arange(n_chunks), jnp.moveaxis(qc, 1, 0)),
+        unroll=n_chunks if unroll else 1,
+    )  # ys: [n_chunks, B, chunk, K, G, hd]
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n_chunks * chunk, K, G, hd)
+    return y[:, :Sq]
+
+
+def gqa_attention(
+    p,
+    x: Array,  # [B, S, D]
+    cfg,
+    *,
+    mask_mode: str = "causal",
+    positions: Array | None = None,
+    prefix_len: int = 0,
+    kv_override: tuple | None = None,  # cross-attention: (k, v) precomputed
+) -> Array:
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = H // K
+    cd = dtype_of(cfg.compute_dtype)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+        if "bk" in p:
+            k = k + p["bk"].astype(cd)
+            v = v + p["bv"].astype(cd)
+    else:
+        k, v = kv_override
+
+    if positions is None:
+        positions = jnp.arange(S)
+    if cfg.rope_fraction > 0 and kv_override is None and cfg.n_heads:
+        cos, sin = rope_angles(
+            positions, int(hd * cfg.rope_fraction), cfg.rope_theta
+        )
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+
+    q = shard_hint(q, "act_heads")
+    qg = q.reshape(B, S, K, G, hd)
+    y = attention_scores_chunked(
+        qg, k, v,
+        mask_mode=mask_mode,
+        q_offset=0,
+        prefix_len=prefix_len,
+        chunk=cfg.attn_chunk,
+        unroll=cfg.unroll_scans,
+    )
+    y = y.reshape(B, S, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(cd))
+    return shard_hint(out, "act_btd")
+
+
+def decode_attention(
+    p,
+    x: Array,  # [B, 1, D]
+    cfg,
+    cache_k: Array,  # [B, Sc, K, hd]
+    cache_v: Array,
+    pos: Array,  # scalar int32: write/read position
+) -> tuple:
+    """Single-token decode with KV cache (prefill positions < pos valid)."""
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = H // K
+    cd = dtype_of(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if cfg.rope_fraction > 0:
+        cos, sin = rope_angles(
+            pos[None], int(hd * cfg.rope_fraction), cfg.rope_theta
+        )
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1
+    )
+    Sc = cache_k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, 1, K, G, hd)
+    s = jnp.einsum(
+        "bqkgh,bskh->bkgqs",
+        qg.astype(jnp.float32) * scale,
+        cache_k.astype(jnp.float32),
+    )
+    valid = jnp.arange(Sc)[None, :] <= pos
+    s = jnp.where(valid[None, None, None], s, _mask_value(s.dtype))
+    prob = jax.nn.softmax(s, axis=-1)
+    y = jnp.einsum("bkgqs,bskh->bqkgh", prob, cache_v.astype(jnp.float32))
+    y = y.reshape(B, 1, H, hd).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(cd))
+    return out, (cache_k, cache_v)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, n_layers: int,
+             dtype):
+    ks = jax.random.split(key, 3)
+    gated = activation in ("swiglu", "geglu")
+    p = {
+        "w_in": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_out": dense_init(
+            ks[1], (d_ff, d_model), scale=1.0 / math.sqrt(d_ff * 2 * n_layers),
+            dtype=dtype,
+        ),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def apply_mlp(p, x: Array, activation: str, compute_dtype) -> Array:
+    cd = dtype_of(compute_dtype) if isinstance(compute_dtype, str) else compute_dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(cd))
+    if activation == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cd))
+        h = jax.nn.silu(g) * h
+    elif activation == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cd))
+        h = jax.nn.gelu(g) * h
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif activation == "relu":
+        h = jax.nn.relu(h)
+    else:
+        raise ValueError(activation)
+    h = shard_hint(h, "act_ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(cd))

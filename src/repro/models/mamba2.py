@@ -1,0 +1,236 @@
+"""Mamba-2 layer: SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060].
+
+Recurrence per head (state H in R^{d_state x head_dim}):
+    H_t = exp(a_t) * H_{t-1} + dt_t * B_t (x) x_t        a_t = dt_t * A
+    y_t = C_t^T H_t + D * x_t
+computed chunk-parallel: intra-chunk quadratic attention-like term +
+inter-chunk linear state recurrence (a lax.scan over chunk states).
+
+`ssd_chunked` is the pure-jnp reference; kernels/ssd_scan.py provides the
+Pallas TPU kernel with the same contract (validated against this).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import shard_hint
+from repro.models.layers import dense_init, dtype_of, init_norm, apply_norm
+
+Array = jax.Array
+
+
+def init_ssm_layer(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_ch = di + 2 * ds
+    ks = jax.random.split(key, 6)
+    # in_proj -> [z (di) | xBC (di + 2ds) | dt (nh)]
+    p = {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * ds + nh), dtype=dtype),
+        "conv_w": dense_init(
+            ks[1], (cfg.ssm_conv, conv_ch), scale=1.0 / math.sqrt(cfg.ssm_conv),
+            dtype=dtype,
+        ),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], (nh,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": init_norm(ks[3], di, "rmsnorm", dtype),
+        "out_proj": dense_init(
+            ks[4], (di, d), scale=1.0 / math.sqrt(di * 2 * cfg.n_layers),
+            dtype=dtype,
+        ),
+    }
+    return p
+
+
+def _segsum(a: Array) -> Array:
+    """a: [..., L] log-decays -> [..., L, L] with out[l,s] = sum_{r=s+1..l} a_r
+    for s <= l, -inf above the diagonal."""
+    L = a.shape[-1]
+    ci = jnp.cumsum(a, axis=-1)
+    diff = ci[..., :, None] - ci[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: Array,   # [B, S, H, P] (pre-multiplied by nothing; dt applied inside)
+    dt: Array,  # [B, S, H] (post-softplus)
+    A: Array,   # [H] negative
+    Bm: Array,  # [B, S, N]
+    Cm: Array,  # [B, S, N]
+    chunk: int,
+    h0: Array | None = None,  # [B, H, N, P] initial state
+    unroll: bool = False,
+) -> Tuple[Array, Array]:
+    """Returns (y [B,S,H,P], final_state [B,H,N,P])."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 padding is state-neutral: decay exp(0)=1, update dt*x=0.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // chunk
+
+    a = (dt * A[None, None, :]).astype(jnp.float32)  # [B,S,H] log-decay
+    xd = (x * dt[..., None]).astype(jnp.float32)     # dt-weighted input
+
+    ac = a.reshape(B_, nc, chunk, H)
+    xc = xd.reshape(B_, nc, chunk, H, P)
+    Bc = Bm.reshape(B_, nc, chunk, N).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nc, chunk, N).astype(jnp.float32)
+
+    # --- intra-chunk (quadratic in chunk length) ---
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(ac, -1, -2)))  # [B,nc,H,l,l]
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)     # [B,nc,l,l]
+    y_diag = jnp.einsum(
+        "bcls,bchls,bcshp->bclhp", scores, Lmat, xc
+    )
+
+    # --- chunk states: S_c = sum_s exp(ci_end - ci_s) B_s (x) xd_s ---
+    ci = jnp.cumsum(ac, axis=2)  # [B,nc,l,H]
+    decay_to_end = jnp.exp(ci[:, :, -1:, :] - ci)  # [B,nc,l,H]
+    S_c = jnp.einsum("bcln,bclh,bclhp->bchnp", Bc, decay_to_end, xc)
+
+    # --- inter-chunk recurrence over chunk states ---
+    total = jnp.exp(ci[:, :, -1, :])  # [B,nc,H] decay across each chunk
+
+    def scan_fn(h, inp):
+        S_i, tot_i = inp  # [B,H,N,P], [B,H]
+        h_new = h * tot_i[..., None, None] + S_i
+        return h_new, h  # emit state at chunk START
+
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, N, P), jnp.float32)
+    hT, h_starts = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(total, 1, 0)),
+        unroll=nc if unroll else 1,
+    )
+    h_starts = jnp.moveaxis(h_starts, 0, 1)  # [B,nc,H,N,P]
+
+    # --- inter-chunk output: decay from chunk start ---
+    decay_from_start = jnp.exp(ci)  # [B,nc,l,H]
+    y_off = jnp.einsum(
+        "bcln,bclh,bchnp->bclhp", Cc, decay_from_start, h_starts
+    )
+
+    y = (y_diag + y_off).reshape(B_, S_pad, H, P)[:, :S]
+    return y, hT
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d. x: [B,S,C]; w: [W,C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i][None, None, :].astype(jnp.float32)
+    return (out + b[None, None, :].astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_forward(
+    p, x: Array, cfg, h0=None, conv0=None, return_state: bool = False
+):
+    """Full-sequence Mamba-2 mixer. x: [B,S,D] -> y [B,S,D].
+
+    If return_state, also returns (ssm_state [B,H,N,P], conv_state
+    [B, W-1, C]) for chunked/streaming continuation."""
+    B, S, D = x.shape
+    cd = dtype_of(cfg.compute_dtype)
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * ds]
+    dt_raw = zxbcdt[..., 2 * di + 2 * ds :]
+
+    if conv0 is not None:
+        xBC_in = jnp.concatenate([conv0.astype(xBC.dtype), xBC], axis=1)
+        xBC_conv = _causal_conv(xBC_in, p["conv_w"], p["conv_b"])[
+            :, conv0.shape[1] :
+        ]
+    else:
+        xBC_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xBC_conv = jax.nn.silu(xBC_conv.astype(jnp.float32)).astype(cd)
+
+    xs = xBC_conv[..., :di].reshape(B, S, nh, hd)
+    Bm = xBC_conv[..., di : di + ds]
+    Cm = xBC_conv[..., di + ds :]
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(p["A_log"])
+
+    y, hT = ssd_chunked(xs.astype(jnp.float32), dt, A, Bm, Cm, cfg.ssm_chunk,
+                        h0=h0, unroll=cfg.unroll_scans)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = apply_norm(p["gate_norm"], y.astype(cd), "rmsnorm")
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    out = shard_hint(out, "act_btd")
+    if return_state:
+        convT = xBC[:, S - (cfg.ssm_conv - 1) :, :]
+        return out, (hT, convT)
+    return out
+
+
+def mamba_decode_step(p, x: Array, cfg, ssm_state: Array, conv_state: Array):
+    """One-token decode. x: [B,1,D]; ssm_state: [B,H,N,P];
+    conv_state: [B, W-1, C]. Returns (y [B,1,D], new states)."""
+    B = x.shape[0]
+    cd = dtype_of(cfg.compute_dtype)
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * ds]  # [B,1,C]
+    dt_raw = zxbcdt[..., 2 * di + 2 * ds :]
+
+    conv_in = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    W = cfg.ssm_conv
+    xBC_conv = (
+        jnp.einsum(
+            "bwc,wc->bc", conv_in[:, -W:, :].astype(jnp.float32),
+            p["conv_w"].astype(jnp.float32),
+        )
+        + p["conv_b"].astype(jnp.float32)
+    )[:, None, :]
+    xBC_conv = jax.nn.silu(xBC_conv).astype(cd)
+    new_conv_state = conv_in[:, 1:, :]
+
+    xs = xBC_conv[..., :di].reshape(B, nh, hd)
+    Bm = xBC_conv[:, 0, di : di + ds].astype(jnp.float32)
+    Cm = xBC_conv[:, 0, di + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_raw[:, 0, :].astype(jnp.float32) + p["dt_bias"][None, :]
+    )  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])  # [B,H]
+    xd = xs.astype(jnp.float32) * dt[..., None]  # [B,H,P]
+    upd = jnp.einsum("bn,bhp->bhnp", Bm, xd)
+    new_ssm = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, new_ssm)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = apply_norm(p["gate_norm"], y.astype(cd), "rmsnorm")
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    return out, (new_ssm, new_conv_state)

@@ -1,0 +1,178 @@
+"""Unified Model API + ShapeDtypeStruct input specs for every dry-run cell.
+
+`Model(cfg)` exposes:
+  init(key) -> params
+  loss(params, batch) -> (scalar, metrics)       [train shapes]
+  prefill(params, batch) -> (logits, cache)      [prefill shapes]
+  decode_step(params, token, cache) -> (logits, cache)  [decode shapes]
+  input_specs(shape_name) -> pytree of jax.ShapeDtypeStruct
+  cache_specs(seq_len, batch) -> cache pytree spec       [decode shapes]
+
+Frontend stubs per the brief: VLM patches and audio frames are provided
+as precomputed embeddings in input_specs (the modality encoder is out of
+scope; the backbone is what the cells exercise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SHAPES, ModelConfig
+from repro.models import layers as L
+from repro.models import serving, transformer
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters ----
+    def init(self, key) -> Dict[str, Any]:
+        return transformer.init_params(key, self.cfg)
+
+    def param_specs(self) -> Dict[str, Any]:
+        """Shapes without allocation (for dry-run lowering)."""
+        return jax.eval_shape(lambda k: self.init(k), jax.random.PRNGKey(0))
+
+    # ---- entry points ----
+    def loss(self, params, batch):
+        return transformer.lm_loss(params, batch, self.cfg)
+
+    def prefill(self, params, batch, cache_len=None):
+        return serving.prefill(params, batch, self.cfg, cache_len)
+
+    def decode_step(self, params, token, cache):
+        return serving.decode_step(params, token, cache, self.cfg)
+
+    # ---- specs ----
+    def _emb_dtype(self):
+        return L.dtype_of(self.cfg.compute_dtype)
+
+    def train_specs(self, seq_len: int, batch: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        i32 = jnp.int32
+        if cfg.is_encoder_decoder:
+            return {
+                "frames": jax.ShapeDtypeStruct(
+                    (batch, cfg.source_len, cfg.d_model), self._emb_dtype()
+                ),
+                "tokens": jax.ShapeDtypeStruct((batch, seq_len), i32),
+                "labels": jax.ShapeDtypeStruct((batch, seq_len), i32),
+            }
+        if cfg.family == "vlm":
+            s_text = seq_len - cfg.prefix_len
+            return {
+                "patches": jax.ShapeDtypeStruct(
+                    (batch, cfg.prefix_len, cfg.d_model), self._emb_dtype()
+                ),
+                "tokens": jax.ShapeDtypeStruct((batch, s_text), i32),
+                "labels": jax.ShapeDtypeStruct((batch, s_text), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq_len), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq_len), i32),
+        }
+
+    def prefill_specs(self, seq_len: int, batch: int) -> Dict[str, Any]:
+        spec = self.train_specs(seq_len, batch)
+        spec.pop("labels", None)
+        if self.cfg.is_encoder_decoder:
+            # prefill = encode source + init decoder caches; no tokens yet
+            spec.pop("tokens", None)
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (batch, seq_len, self.cfg.d_model), self._emb_dtype()
+            )
+        return spec
+
+    def cache_specs(self, seq_len: int, batch: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        cd = self._emb_dtype()
+        K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        i32 = jnp.int32
+
+        def kv(n_layers, length):
+            return jax.ShapeDtypeStruct((n_layers, batch, length, K, hd), cd)
+
+        if cfg.family == "ssm":
+            return {
+                "ssm": jax.ShapeDtypeStruct(
+                    (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                     cfg.ssm_head_dim), jnp.float32,
+                ),
+                "conv": jax.ShapeDtypeStruct(
+                    (cfg.n_layers, batch, cfg.ssm_conv - 1,
+                     cfg.d_inner + 2 * cfg.ssm_state), cd,
+                ),
+            }
+        if cfg.family == "hybrid":
+            nb = cfg.n_layers // cfg.attn_every
+            ni = cfg.attn_every - 1
+            return {
+                "k": kv(nb, seq_len),
+                "v": kv(nb, seq_len),
+                "ssm": jax.ShapeDtypeStruct(
+                    (nb, ni, batch, cfg.ssm_heads, cfg.ssm_state,
+                     cfg.ssm_head_dim), jnp.float32,
+                ),
+                "conv": jax.ShapeDtypeStruct(
+                    (nb, ni, batch, cfg.ssm_conv - 1,
+                     cfg.d_inner + 2 * cfg.ssm_state), cd,
+                ),
+                "pos": jax.ShapeDtypeStruct((), i32),
+            }
+        if cfg.is_encoder_decoder:
+            return {
+                "k": kv(cfg.n_layers, seq_len),
+                "v": kv(cfg.n_layers, seq_len),
+                "ck": kv(cfg.n_layers, cfg.source_len),
+                "cv": kv(cfg.n_layers, cfg.source_len),
+                "pos": jax.ShapeDtypeStruct((), i32),
+            }
+        return {
+            "k": kv(cfg.n_layers, seq_len),
+            "v": kv(cfg.n_layers, seq_len),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+    def decode_specs(self, seq_len: int, batch: int) -> Dict[str, Any]:
+        return {
+            "token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            "cache": self.cache_specs(seq_len, batch),
+        }
+
+    def input_specs(self, shape_name: str) -> Dict[str, Any]:
+        s = SHAPES[shape_name]
+        if s["kind"] == "train":
+            return self.train_specs(s["seq_len"], s["global_batch"])
+        if s["kind"] == "prefill":
+            return self.prefill_specs(s["seq_len"], s["global_batch"])
+        return self.decode_specs(s["seq_len"], s["global_batch"])
+
+    # ---- concrete tiny batch (smoke tests) ----
+    def dummy_batch(self, key, seq_len: int, batch: int) -> Dict[str, Array]:
+        spec = self.train_specs(seq_len, batch)
+        out = {}
+        for name, sd in spec.items():
+            k = jax.random.fold_in(key, hash(name) % (2**31))
+            if sd.dtype == jnp.int32:
+                out[name] = jax.random.randint(
+                    k, sd.shape, 0, self.cfg.vocab_size
+                )
+            else:
+                out[name] = jax.random.normal(k, sd.shape, sd.dtype)
+        return out
+
+    def init_cache(self, batch: int, seq_len: int) -> Dict[str, Array]:
+        return jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            self.cache_specs(seq_len, batch),
+        )
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

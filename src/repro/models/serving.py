@@ -1,0 +1,322 @@
+"""Serving entry points: prefill (build caches) and single-token decode.
+
+Cache pytrees per family (C = cache capacity = the cell's seq_len):
+  dense/moe/vlm : {k [L,B,C,K,hd], v [...], pos ()}
+  ssm           : {ssm [L,B,H,N,P], conv [L,B,W-1,ch]}
+  hybrid        : {k [nb,B,C,K,hd], v, ssm [nb,ni,B,H,N,P],
+                   conv [nb,ni,B,W-1,ch], pos ()}
+  audio(encdec) : {k,v self [L,B,C,K,hd], ck,cv cross [L,B,Ssrc,K,hd], pos ()}
+
+decode_step(params, token [B,1], cache) -> (logits [B,V], cache') is the
+`serve_step` lowered by the decode_32k / long_500k dry-run cells.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models.transformer import (
+    _apply_ffn,
+    _unembed_weight,
+    encoder_forward,
+)
+
+Array = jax.Array
+
+
+def _ffn_sub(lp):
+    return {k: lp[k] for k in ("mlp", "moe", "shared", "dense_res") if k in lp}
+
+
+def _logits(params, x_last: Array, cfg) -> Array:
+    w = _unembed_weight(params, cfg)
+    return jnp.einsum(
+        "bd,dv->bv", x_last.astype(jnp.float32), w.astype(jnp.float32)
+    )
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def _attn_with_kv(lp, h, cfg, mask_mode, prefix_len):
+    """Attention that also returns the K/V it computed (for cache build)."""
+    cd = L.dtype_of(cfg.compute_dtype)
+    B, S, _ = h.shape
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"].astype(cd))
+    if "bk" in lp["attn"]:
+        k = k + lp["attn"]["bk"].astype(cd)
+        v = v + lp["attn"]["bv"].astype(cd)
+    if cfg.rope_fraction > 0 and cfg.n_heads:
+        cos, sin = L.rope_angles(
+            jnp.arange(S), int(hd * cfg.rope_fraction), cfg.rope_theta
+        )
+        k = L.apply_rope(k, cos, sin, cfg.rope_fraction)
+    y = L.gqa_attention(
+        lp["attn"], h, cfg, mask_mode=mask_mode, prefix_len=prefix_len,
+        kv_override=None,
+    )
+    # NOTE: gqa_attention recomputes k/v internally; XLA CSEs the duplicate
+    # einsums away (verified in the lowered HLO), keeping this code simple.
+    # The cache stores the ROTATED keys (decode_attention only rotates the
+    # incoming key at `pos`), so rotation is applied before returning.
+    return y, (k, v)
+
+
+def prefill(params, batch: Dict[str, Array], cfg, cache_len: int | None = None
+            ) -> Tuple[Array, Dict[str, Any]]:
+    cd = L.dtype_of(cfg.compute_dtype)
+    if cfg.family == "ssm":
+        return _prefill_ssm(params, batch, cfg)
+    if cfg.family == "hybrid":
+        return _prefill_hybrid(params, batch, cfg, cache_len)
+    if cfg.is_encoder_decoder:
+        return _prefill_encdec(params, batch, cfg, cache_len)
+
+    if cfg.family == "vlm":
+        tok_emb = params["embed"].astype(cd)[batch["tokens"]]
+        x = jnp.concatenate([batch["patches"].astype(cd), tok_emb], axis=1)
+        mask_mode, prefix_len = "prefix", cfg.prefix_len
+    else:
+        x = params["embed"].astype(cd)[batch["tokens"]]
+        mask_mode, prefix_len = "causal", 0
+    B, S, _ = x.shape
+    C = cache_len or S
+
+    def block(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        y, (k, v) = _attn_with_kv(lp, h, cfg, mask_mode, prefix_len)
+        x = x + y
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + _apply_ffn(_ffn_sub(lp), h, cfg)
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(block, x, params["layers"],
+                               unroll=cfg.unroll_scans or 1)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    pad = C - S
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32)}
+    return _logits(params, x[:, -1], cfg), cache
+
+
+def _prefill_ssm(params, batch, cfg):
+    cd = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"].astype(cd)[batch["tokens"]]
+
+    def block(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        y, (hT, convT) = mamba2.mamba_forward(
+            lp["mamba"], h, cfg, return_state=True
+        )
+        return x + y, (hT, convT)
+
+    x, (ssm, conv) = jax.lax.scan(block, x, params["layers"],
+                                  unroll=cfg.unroll_scans or 1)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    cache = {"ssm": ssm, "conv": conv}
+    return _logits(params, x[:, -1], cfg), cache
+
+
+def _prefill_hybrid(params, batch, cfg, cache_len):
+    cd = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"].astype(cd)[batch["tokens"]]
+    B, S, _ = x.shape
+    C = cache_len or S
+    n_inner = cfg.attn_every - 1
+
+    def block(x, bp):
+        lp = bp["attn_layer"]
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        y, (k, v) = _attn_with_kv(lp, h, cfg, "causal", 0)
+        x = x + y
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + _apply_ffn(_ffn_sub(lp), h, cfg)
+        ssms, convs = [], []
+        for i in range(1, n_inner + 1):
+            mlp_i = bp["mamba_layers"][f"m{i}"]
+            h = L.apply_norm(mlp_i["ln1"], x, cfg.norm)
+            y, (hT, convT) = mamba2.mamba_forward(
+                mlp_i["mamba"], h, cfg, return_state=True
+            )
+            x = x + y
+            h = L.apply_norm(mlp_i["ln2"], x, cfg.norm)
+            x = x + _apply_ffn(_ffn_sub(mlp_i), h, cfg)
+            ssms.append(hT)
+            convs.append(convT)
+        return x, (k, v, jnp.stack(ssms), jnp.stack(convs))
+
+    x, (ks, vs, ssm, conv) = jax.lax.scan(block, x, params["layers"],
+                                          unroll=cfg.unroll_scans or 1)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    pad = C - S
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {
+        "k": ks, "v": vs, "ssm": ssm, "conv": conv,
+        "pos": jnp.asarray(S, jnp.int32),
+    }
+    return _logits(params, x[:, -1], cfg), cache
+
+
+def _prefill_encdec(params, batch, cfg, cache_len):
+    cd = L.dtype_of(cfg.compute_dtype)
+    enc = encoder_forward(params, batch["frames"].astype(cd), cfg)
+    B = enc.shape[0]
+    C = cache_len or cfg.source_len
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def cross_kv(_, cp):
+        ck = jnp.einsum("bsd,dhk->bshk", enc, cp["attn"]["wk"].astype(cd))
+        cv = jnp.einsum("bsd,dhk->bshk", enc, cp["attn"]["wv"].astype(cd))
+        return None, (ck, cv)
+
+    _, (cks, cvs) = jax.lax.scan(cross_kv, None, params["cross"],
+                                 unroll=cfg.unroll_scans or 1)
+    Lc = cfg.n_layers
+    cache = {
+        "k": jnp.zeros((Lc, B, C, K, hd), cd),
+        "v": jnp.zeros((Lc, B, C, K, hd), cd),
+        "ck": cks,
+        "cv": cvs,
+        "pos": jnp.asarray(0, jnp.int32),
+    }
+    # decoder hasn't consumed a token yet: return BOS logits from a zero
+    # hidden state convention (callers feed the first real token next).
+    x0 = jnp.zeros((B, cfg.d_model), cd)
+    return _logits(params, x0, cfg), cache
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def decode_step(params, token: Array, cache: Dict[str, Any], cfg
+                ) -> Tuple[Array, Dict[str, Any]]:
+    cd = L.dtype_of(cfg.compute_dtype)
+    if cfg.family == "ssm":
+        return _decode_ssm(params, token, cache, cfg)
+    if cfg.family == "hybrid":
+        return _decode_hybrid(params, token, cache, cfg)
+    if cfg.is_encoder_decoder:
+        return _decode_encdec(params, token, cache, cfg)
+
+    x = params["embed"].astype(cd)[token]  # [B,1,D]
+    pos = cache["pos"]
+
+    def block(x, xs):
+        lp, ck, cv = xs
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        y, (ck2, cv2) = L.decode_attention(lp["attn"], h, cfg, ck, cv, pos)
+        x = x + y
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + _apply_ffn(_ffn_sub(lp), h, cfg)
+        return x, (ck2, cv2)
+
+    x, (ks, vs) = jax.lax.scan(block, x, (params["layers"], cache["k"],
+                                          cache["v"]),
+                               unroll=cfg.unroll_scans or 1)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    return _logits(params, x[:, -1], cfg), new_cache
+
+
+def _decode_ssm(params, token, cache, cfg):
+    cd = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"].astype(cd)[token]
+
+    def block(x, xs):
+        lp, ssm, conv = xs
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        y, (ssm2, conv2) = mamba2.mamba_decode_step(
+            lp["mamba"], h, cfg, ssm, conv
+        )
+        return x + y, (ssm2, conv2)
+
+    x, (ssm, conv) = jax.lax.scan(
+        block, x, (params["layers"], cache["ssm"], cache["conv"]),
+        unroll=cfg.unroll_scans or 1,
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    return _logits(params, x[:, -1], cfg), {"ssm": ssm, "conv": conv}
+
+
+def _decode_hybrid(params, token, cache, cfg):
+    cd = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"].astype(cd)[token]
+    pos = cache["pos"]
+    n_inner = cfg.attn_every - 1
+
+    def block(x, xs):
+        bp, ck, cv, ssm, conv = xs
+        lp = bp["attn_layer"]
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        y, (ck2, cv2) = L.decode_attention(lp["attn"], h, cfg, ck, cv, pos)
+        x = x + y
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + _apply_ffn(_ffn_sub(lp), h, cfg)
+        ssms, convs = [], []
+        for i in range(1, n_inner + 1):
+            mlp_i = bp["mamba_layers"][f"m{i}"]
+            h = L.apply_norm(mlp_i["ln1"], x, cfg.norm)
+            y, (s2, c2) = mamba2.mamba_decode_step(
+                mlp_i["mamba"], h, cfg, ssm[i - 1], conv[i - 1]
+            )
+            x = x + y
+            h = L.apply_norm(mlp_i["ln2"], x, cfg.norm)
+            x = x + _apply_ffn(_ffn_sub(mlp_i), h, cfg)
+            ssms.append(s2)
+            convs.append(c2)
+        return x, (ck2, cv2, jnp.stack(ssms), jnp.stack(convs))
+
+    x, (ks, vs, ssm, conv) = jax.lax.scan(
+        block, x,
+        (params["layers"], cache["k"], cache["v"], cache["ssm"],
+         cache["conv"]),
+        unroll=cfg.unroll_scans or 1,
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    new_cache = {"k": ks, "v": vs, "ssm": ssm, "conv": conv, "pos": pos + 1}
+    return _logits(params, x[:, -1], cfg), new_cache
+
+
+def _decode_encdec(params, token, cache, cfg):
+    cd = L.dtype_of(cfg.compute_dtype)
+    B = token.shape[0]
+    x = params["embed"].astype(cd)[token]
+    pos = cache["pos"]
+    x = x + L.sinusoidal_positions(cache["k"].shape[2], cfg.d_model)[
+        None, pos, :
+    ].astype(cd)
+
+    def block(x, xs):
+        lp, cp, ck, cv, xck, xcv = xs
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        y, (ck2, cv2) = L.decode_attention(lp["attn"], h, cfg, ck, cv, pos)
+        x = x + y
+        h = L.apply_norm(cp["ln"], x, cfg.norm)
+        x = x + L.gqa_attention(
+            cp["attn"], h, cfg, mask_mode="full", kv_override=(xck, xcv)
+        )
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + _apply_ffn(_ffn_sub(lp), h, cfg)
+        return x, (ck2, cv2)
+
+    x, (ks, vs) = jax.lax.scan(
+        block, x,
+        (params["layers"], params["cross"], cache["k"], cache["v"],
+         cache["ck"], cache["cv"]),
+        unroll=cfg.unroll_scans or 1,
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    new_cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+    return _logits(params, x[:, -1], cfg), new_cache

@@ -1,0 +1,380 @@
+"""Model assembly for all assigned families.
+
+Layer stacks are homogeneous pytrees stacked on a leading layer axis and
+driven by lax.scan (compact HLO => fast 512-way SPMD compiles). Hybrid
+(jamba) scans over super-blocks of `attn_every` layers (1 attention +
+k mamba, MoE on alternate in-block FFNs).
+
+Losses use a sequence-chunked unembed+cross-entropy so [B,S,V] logits are
+never materialized (vocab up to 257k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import shard_hint
+from repro.models import layers as L
+from repro.models import mamba2, moe as moe_lib
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# per-layer init
+# --------------------------------------------------------------------------
+
+def _init_ffn(key, cfg, layer_in_block: int, dtype):
+    """FFN params for one layer: dense MLP or MoE (+shared/+dense-residual)."""
+    use_moe = cfg.n_experts > 0 and (layer_in_block % cfg.moe_every == (
+        cfg.moe_every - 1
+    ))
+    ks = jax.random.split(key, 3)
+    if not use_moe:
+        if cfg.d_ff == 0:
+            return {}
+        return {"mlp": L.init_mlp(
+            ks[0], cfg.d_model, cfg.d_ff, cfg.activation, cfg.n_layers, dtype
+        )}
+    p = {"moe": moe_lib.init_moe(ks[0], cfg, dtype)}
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(
+            ks[1], cfg.d_model,
+            (cfg.moe_d_ff or cfg.d_ff) * cfg.n_shared_experts,
+            cfg.activation, cfg.n_layers, dtype,
+        )
+    if cfg.moe_dense_residual:
+        p["dense_res"] = L.init_mlp(
+            ks[2], cfg.d_model, cfg.d_ff, cfg.activation, cfg.n_layers, dtype
+        )
+    return p
+
+
+def _apply_ffn(p, x: Array, cfg) -> Array:
+    if not p:
+        return jnp.zeros_like(x)
+    if "mlp" in p:
+        return L.apply_mlp(p["mlp"], x, cfg.activation, cfg.compute_dtype)
+    y = moe_lib.apply_moe(p["moe"], x, cfg)
+    if "shared" in p:
+        y = y + L.apply_mlp(p["shared"], x, cfg.activation, cfg.compute_dtype)
+    if "dense_res" in p:
+        y = y + L.apply_mlp(
+            p["dense_res"], x, cfg.activation, cfg.compute_dtype
+        )
+    return y
+
+
+def _init_dense_layer(key, cfg, layer_idx: int, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+        "attn": L.init_attention(ks[1], cfg, dtype),
+        "ln2": L.init_norm(ks[2], cfg.d_model, cfg.norm, dtype),
+    }
+    p.update(_init_ffn(ks[3], cfg, layer_idx, dtype))
+    return p
+
+
+def _init_ssm_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+        "mamba": mamba2.init_ssm_layer(ks[1], cfg, dtype),
+    }
+
+
+def _init_hybrid_block(key, cfg, dtype):
+    """One super-block: 1 attention layer + (attn_every-1) mamba layers,
+    each followed by an FFN; MoE on alternate in-block positions."""
+    n_inner = cfg.attn_every
+    ks = jax.random.split(key, 2 * n_inner + 1)
+    block: Dict[str, Any] = {}
+    # position 0: attention
+    block["attn_layer"] = {
+        "ln1": L.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+        "attn": L.init_attention(ks[1], cfg, dtype),
+        "ln2": L.init_norm(ks[2], cfg.d_model, cfg.norm, dtype),
+        **_init_ffn(ks[3], cfg, 0, dtype),
+    }
+    # positions 1..n-1: mamba layers. FFN type alternates (MoE every
+    # `moe_every`), so inner layers are heterogeneous pytrees: keep them
+    # as named entries (unrolled inside the block; scan runs over blocks).
+    mlayers = {}
+    for i in range(1, n_inner):
+        kk = jax.random.split(ks[3 + i], 4)
+        mlayers[f"m{i}"] = {
+            "ln1": L.init_norm(kk[0], cfg.d_model, cfg.norm, dtype),
+            "mamba": mamba2.init_ssm_layer(kk[1], cfg, dtype),
+            "ln2": L.init_norm(kk[2], cfg.d_model, cfg.norm, dtype),
+            **_init_ffn(kk[3], cfg, i, dtype),
+        }
+    block["mamba_layers"] = mlayers
+    return block
+
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    dtype = L.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": L.init_norm(ks[1], cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_init(
+            ks[2], (cfg.d_model, cfg.vocab_size),
+            scale=1.0 / math.sqrt(cfg.d_model), dtype=dtype,
+        )
+
+    def stack(fn, n, key):
+        keys = jax.random.split(key, n)
+        layers = [fn(k) for k in keys]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+    if cfg.family == "ssm":
+        p["layers"] = stack(
+            lambda k: _init_ssm_layer(k, cfg, dtype), cfg.n_layers, ks[3]
+        )
+    elif cfg.family == "hybrid":
+        n_blocks = cfg.n_layers // cfg.attn_every
+        p["layers"] = stack(
+            lambda k: _init_hybrid_block(k, cfg, dtype), n_blocks, ks[3]
+        )
+    else:
+        # dense / moe / vlm decoder stacks (moe_every folds into layer idx:
+        # with moe_every==1 every layer is MoE; ==2 scan over pairs)
+        if cfg.n_experts and cfg.moe_every > 1:
+            def pair(k):
+                kk = jax.random.split(k, cfg.moe_every)
+                layers = [
+                    _init_dense_layer(kk[i], cfg, i, dtype)
+                    for i in range(cfg.moe_every)
+                ]
+                return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+            p["layers"] = stack(pair, cfg.n_layers // cfg.moe_every, ks[3])
+        else:
+            p["layers"] = stack(
+                lambda k: _init_dense_layer(
+                    k, cfg, cfg.moe_every - 1, dtype
+                ),
+                cfg.n_layers, ks[3],
+            )
+    if cfg.is_encoder_decoder:
+        enc_cfg = dataclasses.replace(cfg, n_experts=0)
+        p["encoder"] = stack(
+            lambda k: _init_dense_layer(k, enc_cfg, 0, dtype),
+            cfg.n_encoder_layers, ks[4],
+        )
+        p["cross"] = stack(
+            lambda k: {
+                "ln": L.init_norm(
+                    jax.random.fold_in(k, 0), cfg.d_model, cfg.norm, dtype
+                ),
+                "attn": L.init_attention(jax.random.fold_in(k, 1), cfg, dtype),
+            },
+            cfg.n_layers, ks[5],
+        )
+    return p
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+def _dense_block(x, lp, cfg, mask_mode, prefix_len):
+    h = L.apply_norm(lp["ln1"], x, cfg.norm)
+    x = x + L.gqa_attention(
+        lp["attn"], h, cfg, mask_mode=mask_mode, prefix_len=prefix_len
+    )
+    h = L.apply_norm(lp["ln2"], x, cfg.norm)
+    x = x + _apply_ffn(
+        {k: lp[k] for k in ("mlp", "moe", "shared", "dense_res") if k in lp},
+        h, cfg,
+    )
+    return x
+
+
+def _ssm_block(x, lp, cfg):
+    h = L.apply_norm(lp["ln1"], x, cfg.norm)
+    x = x + mamba2.mamba_forward(lp["mamba"], h, cfg)
+    return x
+
+
+def _hybrid_block(x, bp, cfg, mask_mode, prefix_len):
+    x = _dense_block(x, bp["attn_layer"], cfg, mask_mode, prefix_len)
+    n_inner = cfg.attn_every - 1
+    for i in range(1, n_inner + 1):
+        lp = bp["mamba_layers"][f"m{i}"]
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        x = x + mamba2.mamba_forward(lp["mamba"], h, cfg)
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + _apply_ffn(
+            {k: lp[k] for k in ("mlp", "moe", "shared", "dense_res")
+             if k in lp}, h, cfg,
+        )
+    return x
+
+
+def backbone(params, x: Array, cfg, *, mask_mode="causal", prefix_len=0):
+    """Runs the decoder stack on embedded inputs x [B,S,D]."""
+
+    if cfg.family == "ssm":
+        def block(x, lp):
+            return _ssm_block(x, lp, cfg), None
+    elif cfg.family == "hybrid":
+        def block(x, lp):
+            return _hybrid_block(x, lp, cfg, mask_mode, prefix_len), None
+    else:
+        def block(x, lp):
+            return _dense_block(x, lp, cfg, mask_mode, prefix_len), None
+
+    if cfg.remat == "block":
+        from jax.ad_checkpoint import checkpoint_name
+
+        inner = block
+
+        def block(x, lp):
+            # Name the carry so the policy saves EXACTLY this bf16 tensor.
+            # Without it XLA materialized an extra f32 copy of the whole
+            # [L,B,S,D] residual stack for the backward loop (hoisted norm
+            # convert); see EXPERIMENTS.md §Perf iteration 1.
+            x = checkpoint_name(x, "block_in")
+            return inner(x, lp)
+
+        block = jax.checkpoint(
+            block,
+            policy=jax.checkpoint_policies.save_only_these_names("block_in"),
+        )
+    x, _ = jax.lax.scan(block, x, params["layers"],
+                        unroll=cfg.unroll_scans or 1)
+    return L.apply_norm(params["final_norm"], x, cfg.norm)
+
+
+def encoder_forward(params, frames: Array, cfg) -> Array:
+    """Enc-dec encoder over precomputed frame embeddings [B,Ssrc,D]."""
+    S = frames.shape[1]
+    x = frames + L.sinusoidal_positions(S, cfg.d_model)[None].astype(
+        frames.dtype
+    )
+
+    def block(x, lp):
+        return _dense_block(x, lp, cfg, "full", 0), None
+
+    if cfg.remat == "block":
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(block, x, params["encoder"],
+                        unroll=cfg.unroll_scans or 1)
+    return x
+
+
+def decoder_forward_encdec(params, tokens: Array, enc_out: Array, cfg):
+    """Enc-dec decoder: self-attn (causal) + cross-attn + FFN per layer."""
+    cd = L.dtype_of(cfg.compute_dtype)
+    B, S = tokens.shape
+    x = params["embed"].astype(cd)[tokens]
+    x = x + L.sinusoidal_positions(S, cfg.d_model)[None].astype(cd)
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def block(x, lps):
+        lp, cp = lps
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        x = x + L.gqa_attention(lp["attn"], h, cfg, mask_mode="causal")
+        h = L.apply_norm(cp["ln"], x, cfg.norm)
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wk"].astype(cd))
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wv"].astype(cd))
+        x = x + L.gqa_attention(
+            cp["attn"], h, cfg, mask_mode="full", kv_override=(ck, cv)
+        )
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + _apply_ffn(
+            {k: lp[k] for k in ("mlp",) if k in lp}, h, cfg
+        )
+        return x, None
+
+    if cfg.remat == "block":
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(block, x, (params["layers"], params["cross"]),
+                        unroll=cfg.unroll_scans or 1)
+    return L.apply_norm(params["final_norm"], x, cfg.norm)
+
+
+# --------------------------------------------------------------------------
+# losses (sequence-chunked unembed + CE)
+# --------------------------------------------------------------------------
+
+def _unembed_weight(params, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return w  # [D, V]
+
+
+def chunked_ce_loss(params, x: Array, labels: Array, cfg) -> Tuple[Array, Dict]:
+    """x: [B,S,D]; labels [B,S] int32 (-1 = ignore). Never materializes
+    [B,S,V]: scans over sequence chunks of cfg.logit_chunk."""
+    B, S, D = x.shape
+    w = _unembed_weight(params, cfg)
+    chunk = min(cfg.logit_chunk, S)
+    n_chunks = (S + chunk - 1) // chunk
+    pad = n_chunks * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = jnp.moveaxis(x.reshape(B, n_chunks, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n_chunks, chunk), 1, 0)
+
+    @jax.checkpoint  # recompute chunk logits in backward: never keeps
+    def one(carry, inp):  # [B,chunk,V] alive across the scan residuals
+        xb, lb = inp  # [B,chunk,D], [B,chunk]
+        logits = jnp.einsum(
+            "bsd,dv->bsv", xb.astype(jnp.float32), w.astype(jnp.float32)
+        )
+        logits = shard_hint(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (lb >= 0).astype(jnp.float32)
+        loss_sum, n = carry
+        return (
+            loss_sum + jnp.sum((lse - ll) * valid),
+            n + jnp.sum(valid),
+        ), None
+
+    (loss_sum, n), _ = jax.lax.scan(one, (0.0, 0.0), (xc, lc),
+                                    unroll=n_chunks if cfg.unroll_scans
+                                    else 1)
+    loss = loss_sum / jnp.maximum(n, 1.0)
+    return loss, {"loss": loss, "tokens": n}
+
+
+# --------------------------------------------------------------------------
+# top-level entry points
+# --------------------------------------------------------------------------
+
+def lm_loss(params, batch: Dict[str, Array], cfg) -> Tuple[Array, Dict]:
+    """Causal/prefix-LM/enc-dec training loss."""
+    cd = L.dtype_of(cfg.compute_dtype)
+    if cfg.is_encoder_decoder:
+        enc = encoder_forward(params, batch["frames"].astype(cd), cfg)
+        x = decoder_forward_encdec(params, batch["tokens"], enc, cfg)
+        return chunked_ce_loss(params, x, batch["labels"], cfg)
+    if cfg.family == "vlm":
+        tok_emb = params["embed"].astype(cd)[batch["tokens"]]
+        x = jnp.concatenate([batch["patches"].astype(cd), tok_emb], axis=1)
+        x = shard_hint(x, "act_btd")
+        x = backbone(
+            params, x, cfg, mask_mode="prefix", prefix_len=cfg.prefix_len
+        )
+        x_text = x[:, cfg.prefix_len :, :]
+        return chunked_ce_loss(params, x_text, batch["labels"], cfg)
+    x = params["embed"].astype(cd)[batch["tokens"]]
+    x = shard_hint(x, "act_btd")
+    x = backbone(params, x, cfg, mask_mode="causal")
+    return chunked_ce_loss(params, x, batch["labels"], cfg)

@@ -1,0 +1,119 @@
+"""AdamW from scratch (no optax dependency), ZeRO-friendly.
+
+State = {m, v (fp32, sharded like params), step}. Parameters may be
+bf16; the update is computed in fp32 and cast back. Global-norm clipping
+and decoupled weight decay included. `scale_by_schedule` supplies cosine
+LR with linear warmup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    step: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[Array], Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return AdamWState(
+            m=zeros,
+            v=jax.tree.map(lambda z: z.copy(), zeros),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def _lr(self, step: Array) -> Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(
+        self, grads, state: AdamWState, params
+    ) -> Tuple[Any, AdamWState, Dict[str, Array]]:
+        # global-norm clip in fp32
+        gsq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)
+        )
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * delta
+            return p2.astype(p.dtype), m2, v2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(new_m, new_v, step), {
+            "grad_norm": gnorm, "lr": lr,
+        }
+
+
+def cosine_schedule(
+    peak_lr: float, warmup: int, total: int, floor: float = 0.1
+) -> Callable[[Array], Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def make_train_step(model, opt: AdamW):
+    """Returns train_step(params, opt_state, batch) -> (params', state',
+    metrics). This is the function the train_4k dry-run cells lower."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True
+        )(params)
+        new_params, new_state, opt_metrics = opt.update(
+            grads, opt_state, params
+        )
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,14 @@
+import os
+
+# Keep tests on the single real CPU device (the dry-run sets its own
+# device-count flag in its subprocess). Cap compilation parallelism for
+# the 1-core container.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,76 @@
+"""Carbon-intensity source tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.carbon import (
+    ConstantCarbonSource,
+    RandomCarbonSource,
+    TableCarbonSource,
+    UKRegionalTraceSource,
+    from_eso_csv,
+    materialize,
+)
+
+
+def test_random_source_range_and_determinism():
+    src = RandomCarbonSource(N=5, cmax=700)
+    key = jax.random.PRNGKey(0)
+    tab = materialize(src, 200, key)
+    assert tab.shape == (200, 6)
+    assert tab.min() >= 0 and tab.max() <= 700
+    tab2 = materialize(src, 200, key)
+    np.testing.assert_array_equal(tab, tab2)
+    # different slots differ
+    assert not np.array_equal(tab[0], tab[1])
+
+
+def test_uk_trace_structure():
+    src = UKRegionalTraceSource(N=5)
+    tab = materialize(src, 48 * 7)  # one week of 30-min slots
+    assert tab.shape == (48 * 7, 6)
+    assert tab.min() >= 5.0 and tab.max() <= 700.0
+    # regional identity: Scotland-like region (col 1) cleaner on average
+    # than the gas-heavy region (col 2)
+    assert tab[:, 1].mean() < tab[:, 2].mean()
+    # diurnal structure: the mean slot-of-day profile has real amplitude
+    prof = tab[:, 3].reshape(-1, 48).mean(0)
+    assert prof.max() - prof.min() > 40.0
+
+
+def test_uk_trace_deterministic_in_t():
+    src = UKRegionalTraceSource(N=5, seed=7)
+    k = jax.random.PRNGKey(99)  # source ignores the key: pure in (seed,t)
+    a = src(jnp.asarray(13), k)
+    b = src(jnp.asarray(13), jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_table_source_wraps():
+    tab = np.arange(12, dtype=np.float32).reshape(3, 4)
+    src = TableCarbonSource(table=tab)
+    Ce, Cc = src(jnp.asarray(4), None)  # t=4 -> row 1
+    assert float(Ce) == tab[1, 0]
+    np.testing.assert_array_equal(np.asarray(Cc), tab[1, 1:])
+    assert src.N == 3
+
+
+def test_eso_csv_loader(tmp_path):
+    p = tmp_path / "eso.csv"
+    p.write_text(
+        "datetime,edge,r1,r2\n"
+        "2022-01-01T00:00,100,50,300\n"
+        "2022-01-01T00:30,120,60,280\n"
+    )
+    src = from_eso_csv(str(p), n_regions=2)
+    Ce, Cc = src(jnp.asarray(1), None)
+    assert float(Ce) == 120.0
+    np.testing.assert_array_equal(np.asarray(Cc), [60.0, 280.0])
+
+
+def test_constant_source():
+    src = ConstantCarbonSource(N=3, Ce=5.0, Cc=7.0)
+    Ce, Cc = src(jnp.asarray(0), None)
+    assert float(Ce) == 5.0
+    assert np.all(np.asarray(Cc) == 7.0)

@@ -1,0 +1,97 @@
+"""Lemma-1 / drift-plus-penalty property tests."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import dpp
+from repro.core.policies import CarbonIntensityPolicy, RandomPolicy
+from repro.core.queueing import (
+    Action,
+    NetworkSpec,
+    NetworkState,
+    drift_bound_B,
+)
+
+M, N = 3, 2
+
+
+def spec_():
+    return NetworkSpec(
+        pe=np.array([2.0, 3.0, 4.0], np.float32),
+        pc=np.array([[5.0, 6.0], [7.0, 8.0], [9.0, 10.0]], np.float32),
+        Pe=40.0,
+        Pc=np.array([90.0, 70.0], np.float32),
+    )
+
+
+@given(
+    Qe=hnp.arrays(np.float32, (M,), elements=st.integers(0, 100).map(float)),
+    Qc=hnp.arrays(np.float32, (M, N), elements=st.integers(0, 100).map(float)),
+    a=hnp.arrays(np.float32, (M,), elements=st.integers(0, 15).map(float)),
+    Ce=st.integers(0, 700).map(float),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_lemma1_bound_holds(Qe, Qc, a, Ce, seed):
+    """Delta(t) + V*C(t) <= B + sum Qe*a + sum b*d + sum c*w  (eq. 17)
+    for arbitrary feasible actions, states and arrivals."""
+    spec = spec_()
+    state = NetworkState(Qe=jnp.asarray(Qe), Qc=jnp.asarray(Qc))
+    rng = np.random.default_rng(seed)
+    Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+    act = RandomPolicy()(
+        state, spec, jnp.float32(Ce), Cc, jnp.asarray(a), jax.random.PRNGKey(seed)
+    )
+    V = jnp.float32(0.05)
+    B = drift_bound_B(spec, a_max=np.full(M, 15.0))
+    lhs = dpp.drift_plus_penalty(
+        state, spec, act, jnp.asarray(a), jnp.float32(Ce), Cc, V
+    )
+    rhs = dpp.lemma1_rhs(
+        state, spec, act, jnp.asarray(a), jnp.float32(Ce), Cc, V, B
+    )
+    assert float(lhs) <= float(rhs) + 1e-2
+
+
+def test_policy_minimizes_surrogate_vs_random():
+    """Algorithm 1's action never has a larger surrogate (19) value than
+    random feasible actions (statistical sanity, 50 trials)."""
+    spec = spec_()
+    rng = np.random.default_rng(0)
+    worse = 0
+    for trial in range(50):
+        state = NetworkState(
+            Qe=jnp.asarray(rng.integers(0, 200, M).astype(np.float32)),
+            Qc=jnp.asarray(rng.integers(0, 200, (M, N)).astype(np.float32)),
+        )
+        Ce = jnp.float32(rng.uniform(0, 700))
+        Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+        pol_act = CarbonIntensityPolicy(V=0.05)(state, spec, Ce, Cc, None, None)
+        rnd_act = RandomPolicy()(
+            state, spec, Ce, Cc, None, jax.random.PRNGKey(trial)
+        )
+        v_pol = float(dpp.surrogate_value(state, spec, pol_act, Ce, Cc, 0.05))
+        v_rnd = float(dpp.surrogate_value(state, spec, rnd_act, Ce, Cc, 0.05))
+        if v_pol > v_rnd + 1e-3:
+            worse += 1
+    assert worse == 0, f"greedy beaten by random in {worse}/50 trials"
+
+
+def test_scores_definitions():
+    spec = spec_()
+    state = NetworkState(
+        Qe=jnp.array([10.0, 0.0, 5.0]),
+        Qc=jnp.array([[1.0, 2.0], [3.0, 4.0], [5.0, 6.0]]),
+    )
+    pe, pc, _, _ = spec.as_arrays()
+    V, Ce = jnp.float32(0.1), jnp.float32(100.0)
+    Cc = jnp.array([50.0, 60.0])
+    b = dpp.dispatch_scores(state, pe, Ce, V)
+    c = dpp.processing_scores(state, pc, Cc, V)
+    # b[0,0] = V*Ce*pe0 + Qc00 - Qe0 = 0.1*100*2 + 1 - 10 = 11
+    np.testing.assert_allclose(float(b[0, 0]), 11.0, rtol=1e-6)
+    # c[2,1] = V*Cc1*pc21 - Qc21 = 0.1*60*10 - 6 = 54
+    np.testing.assert_allclose(float(c[2, 1]), 54.0, rtol=1e-6)

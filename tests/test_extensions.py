@@ -1,0 +1,111 @@
+"""Beyond-paper extension tests: oracle bound, threshold ablation,
+adaptive-V controller."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_workloads import paper_spec
+from repro.core import (
+    CarbonIntensityPolicy,
+    QueueLengthPolicy,
+    RandomCarbonSource,
+    UniformArrivals,
+    simulate,
+)
+from repro.core.carbon import materialize
+from repro.core.extensions import (
+    AdaptiveVController,
+    ThresholdPolicy,
+    oracle_emissions_for_work,
+)
+from repro.core.queueing import init_state
+
+
+def _tables(T=300, seed=0):
+    carbon = RandomCarbonSource(N=5)
+    arrive = UniformArrivals(M=5, amax=400)
+    key = jax.random.PRNGKey(seed)
+    ctab = materialize(carbon, T, jax.random.split(key, 3)[0])
+    atab = np.stack(
+        [np.asarray(arrive(jnp.asarray(t), jax.random.split(key, 3)[1]))
+         for t in range(T)]
+    )
+    return carbon, arrive, key, ctab, atab
+
+
+def test_oracle_lower_bounds_online_policies():
+    """For the SAME consumed energy, the clairvoyant schedule emits less:
+    lb(work) <= policy emissions, for both policies."""
+    spec = paper_spec()
+    T = 300
+    carbon, arrive, key, ctab, atab = _tables(T)
+    for pol in (CarbonIntensityPolicy(V=0.05), QueueLengthPolicy()):
+        r = simulate(pol, spec, carbon, arrive, T, key)
+        lb = oracle_emissions_for_work(
+            spec, ctab, float(np.sum(r.energy_edge)),
+            np.asarray(r.energy_cloud).sum(),
+        )
+        assert lb <= float(r.cum_emissions[-1]) * 1.001, (
+            lb, float(r.cum_emissions[-1]))
+
+
+def test_online_policy_approaches_its_oracle():
+    """Emissions per unit work: the paper's policy lands much closer to
+    its clairvoyant bound than the carbon-blind baseline does."""
+    spec = paper_spec()
+    T = 400
+    carbon, arrive, key, ctab, atab = _tables(T)
+
+    def excess(pol):
+        r = simulate(pol, spec, carbon, arrive, T, key)
+        lb = oracle_emissions_for_work(
+            spec, ctab, float(np.sum(r.energy_edge)),
+            np.asarray(r.energy_cloud).sum(),
+        )
+        return float(r.cum_emissions[-1]) / max(lb, 1e-9)
+
+    ex_carbon = excess(CarbonIntensityPolicy(V=0.2))
+    ex_queue = excess(QueueLengthPolicy())
+    assert ex_carbon < ex_queue
+    assert ex_carbon < 2.0, f"carbon policy {ex_carbon:.2f}x its bound"
+
+
+def test_threshold_policy_unstable_when_too_strict():
+    """CI threshold below the typical minimum -> queues blow up linearly:
+    the ablation that motivates drift-plus-penalty."""
+    spec = paper_spec()
+    carbon = RandomCarbonSource(N=5)
+    arrive = UniformArrivals(M=5, amax=400)
+    key = jax.random.PRNGKey(0)
+    r = simulate(ThresholdPolicy(threshold=5.0), spec, carbon, arrive, 400,
+                 key)
+    backlog = np.asarray(r.Qc).sum((1, 2)) + np.asarray(r.Qe).sum(1)
+    # linear growth: last-quarter mean >> first-quarter mean
+    assert backlog[-100:].mean() > 3 * max(backlog[:100].mean(), 1.0)
+
+
+def test_adaptive_v_holds_backlog_near_target():
+    from repro.core.queueing import step as queue_step
+    from repro.core.queueing import emissions as emis
+
+    spec = paper_spec()
+    carbon = RandomCarbonSource(N=5)
+    arrive = UniformArrivals(M=5, amax=400)
+    key = jax.random.PRNGKey(1)
+    kc, ka = jax.random.split(key)
+    target = 30000.0
+    ctrl = AdaptiveVController(target_backlog=target, V=0.001)
+    state = init_state(spec.M, spec.N)
+    backlogs = []
+    for t in range(250):
+        Ce, Cc = carbon(jnp.asarray(t), kc)
+        a = arrive(jnp.asarray(t), ka)
+        act = ctrl.policy()(state, spec, Ce, Cc, a, None)
+        state = queue_step(state, act, a)
+        backlog = float(state.Qe.sum() + state.Qc.sum())
+        backlogs.append(backlog)
+        ctrl.update(backlog)
+    tail = np.asarray(backlogs[-80:])
+    assert tail.mean() < 3 * target
+    assert tail.mean() > target / 5
+    assert ctrl.v_min < ctrl.V < ctrl.v_max

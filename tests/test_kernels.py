@@ -1,0 +1,267 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU), as required for every Pallas kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+jax.config.update("jax_enable_x64", False)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------- flash ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,K,Sq,Skv,hd,bq,bk",
+    [
+        (1, 4, 4, 128, 128, 64, 128, 128),   # MHA, single block
+        (2, 4, 2, 256, 256, 64, 128, 128),   # GQA 2:1
+        (1, 8, 1, 128, 256, 32, 64, 128),    # MQA, rectangular, small blocks
+        (2, 2, 2, 64, 64, 128, 64, 64),      # small seq
+        (1, 4, 2, 384, 256, 64, 128, 128),   # non-equal q/kv lens
+    ],
+)
+@pytest.mark.parametrize("mode", ["causal", "full", "prefix"])
+def test_flash_attention_sweep(B, H, K, Sq, Skv, hd, bq, bk, mode, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * H + Sq), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, K, Skv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, K, Skv, hd)).astype(dtype)
+    prefix = 32 if mode == "prefix" else 0
+    got = ops.flash_attention(
+        q, k, v, mask_mode=mode, prefix_len=prefix, bq=bq, bk=bk,
+        interpret=True,
+    )
+    want = ops.flash_attention_ref(q, k, v, mask_mode=mode, prefix_len=prefix)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol(dtype),
+    )
+
+
+def test_flash_attention_matches_model_attention():
+    """Kernel agrees with the model's chunked-attention path (both vs the
+    naive oracle) -- the integration contract used at serve time."""
+    from repro.models.layers import attention_scores_chunked
+
+    B, H, K, S, hd = 1, 4, 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, S, K, H // K, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    y_model = attention_scores_chunked(
+        q, k, v, mask_mode="causal", q_offset=0, chunk=64
+    )  # [B,S,K,G,hd]
+    qk = jnp.transpose(
+        q.reshape(B, S, H, hd), (0, 2, 1, 3)
+    )  # [B,H,S,hd], head order h = kvhead*G + g
+    kk = jnp.transpose(k, (0, 2, 1, 3))
+    vk = jnp.transpose(v, (0, 2, 1, 3))
+    y_kernel = ops.flash_attention(qk, kk, vk, mask_mode="causal",
+                                   bq=64, bk=64, interpret=True)
+    y_kernel = jnp.transpose(y_kernel, (0, 2, 1, 3)).reshape(
+        B, S, K, H // K, hd
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_kernel), np.asarray(y_model), rtol=2e-5, atol=2e-5
+    )
+
+
+# ------------------------------------------------------------------ ssd ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,nc,l,H,P,N,bh",
+    [
+        (1, 2, 16, 8, 8, 16, 8),
+        (2, 3, 32, 16, 8, 16, 8),
+        (1, 1, 64, 4, 16, 32, 4),
+        (2, 2, 32, 16, 16, 8, 16),  # bh == H
+    ],
+)
+def test_ssd_chunk_sweep(B, nc, l, H, P, N, bh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(l + H), 4)
+    a = -jax.nn.softplus(jax.random.normal(ks[0], (B, nc, l, H))).astype(dtype)
+    x = jax.random.normal(ks[1], (B, nc, l, H, P)).astype(dtype)
+    Bm = jax.random.normal(ks[2], (B, nc, l, N)).astype(dtype)
+    Cm = jax.random.normal(ks[3], (B, nc, l, N)).astype(dtype)
+    got = ops.ssd_chunk_intra(a, x, Bm, Cm, block_heads=bh, interpret=True)
+    want = ops.ssd_chunk_intra_ref(a, x, Bm, Cm)
+    for g, w, name in zip(got, want, ["y_diag", "S_c", "total"]):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            err_msg=name, **tol(dtype),
+        )
+
+
+def test_ssd_kernel_plugs_into_full_ssd():
+    """Replacing the XLA intra-chunk computation with the kernel output
+    reproduces models.mamba2.ssd_chunked end to end."""
+    from repro.models import mamba2
+
+    B, S, H, P, N, chunk = 1, 64, 4, 8, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y_ref, hT_ref = mamba2.ssd_chunked(x, dt, A, Bm, Cm, chunk)
+
+    nc = S // chunk
+    a = (dt * A[None, None]).reshape(B, nc, chunk, H)
+    xd = (x * dt[..., None]).reshape(B, nc, chunk, H, P)
+    Bc = Bm.reshape(B, nc, chunk, N)
+    Cc = Cm.reshape(B, nc, chunk, N)
+    y_diag, S_c, total = ops.ssd_chunk_intra(a, xd, Bc, Cc, block_heads=4,
+                                             interpret=True)
+
+    def scan_fn(h, inp):
+        S_i, tot_i = inp
+        return h * tot_i[..., None, None] + S_i, h
+
+    hT, h_starts = jax.lax.scan(
+        scan_fn, jnp.zeros((B, H, N, P)),
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    h_starts = jnp.moveaxis(h_starts, 0, 1)
+    ci = jnp.cumsum(a, axis=2)
+    y_off = jnp.einsum(
+        "bcln,bclh,bchnp->bclhp", Cc, jnp.exp(ci), h_starts
+    )
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- carbon ----
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize(
+    "M,N,bm,bn",
+    [
+        (256, 256, 128, 128),
+        (512, 1024, 256, 256),
+        (128, 128, 128, 128),
+        (1024, 256, 256, 64),
+    ],
+)
+def test_carbon_scores_sweep(M, N, bm, bn, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(M + N), 5)
+    Qc = jax.random.randint(ks[0], (M, N), 0, 5000).astype(dtype)
+    pc = jax.random.uniform(ks[1], (M, N), minval=1, maxval=100).astype(dtype)
+    Qe = jax.random.randint(ks[2], (M,), 0, 5000).astype(dtype)
+    pe = jax.random.uniform(ks[3], (M,), minval=1, maxval=10).astype(dtype)
+    Cc = jax.random.uniform(ks[4], (N,), minval=0, maxval=700).astype(dtype)
+    VCe = jnp.float32(0.05 * 350.0)
+    c, n1, b = ops.carbon_scores(Qc, pc, Qe, pe, Cc, VCe, block_m=bm,
+                                 block_n=bn, interpret=True)
+    cr, n1r, br = ops.carbon_scores_ref(Qc, pc, Qe, pe, Cc, VCe)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), rtol=1e-4,
+                               atol=1e-2)
+    # argmin ties can differ between tiled and flat reduction only when
+    # equal values exist; compare the achieved minima instead of indices.
+    np.testing.assert_allclose(
+        np.asarray(Qc)[np.arange(M), np.asarray(n1)],
+        np.asarray(Qc)[np.arange(M), np.asarray(n1r)],
+    )
+    np.testing.assert_allclose(np.asarray(b), np.asarray(br), rtol=1e-4,
+                               atol=1e-2)
+
+
+def test_carbon_kernel_policy_equivalence():
+    """Policy decisions built from kernel outputs == vectorized policy."""
+    from repro.core.policies import CarbonIntensityPolicy
+    from repro.core.queueing import NetworkSpec, NetworkState
+
+    rng = np.random.default_rng(0)
+    M, N = 256, 128
+    spec = NetworkSpec(
+        pe=rng.uniform(1, 8, M).astype(np.float32),
+        pc=rng.uniform(2, 100, (M, N)).astype(np.float32),
+        Pe=500.0,
+        Pc=rng.uniform(100, 1000, N).astype(np.float32),
+    )
+    state = NetworkState(
+        Qe=jnp.asarray(rng.integers(0, 1000, M).astype(np.float32)),
+        Qc=jnp.asarray(rng.integers(0, 1000, (M, N)).astype(np.float32)),
+    )
+    Ce = jnp.float32(rng.uniform(0, 700))
+    Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+    V = 0.05
+    c, n1, b = ops.carbon_scores(
+        state.Qc, jnp.asarray(spec.pc), state.Qe, jnp.asarray(spec.pe),
+        Cc, jnp.float32(V * Ce), block_m=128, block_n=128, interpret=True,
+    )
+    # dispatch coefficients used by Algorithm 1 must agree
+    pol = CarbonIntensityPolicy(V=V)
+    n1_pol = jnp.argmin(state.Qc, axis=1)
+    np.testing.assert_array_equal(np.asarray(n1), np.asarray(n1_pol))
+    act = pol(state, spec, Ce, Cc, None, None)
+    # b<0 is necessary for any dispatch of type m
+    dispatched = np.asarray(act.d).sum(1) > 0
+    assert np.all(np.asarray(b)[dispatched] < 0)
+
+
+# --------------------------------------------------------------- decode ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,K,S,hd,bs,pos",
+    [
+        (2, 8, 2, 512, 64, 256, 511),    # GQA, full cache
+        (1, 4, 4, 1024, 64, 512, 100),   # MHA, partial cache
+        (2, 8, 1, 256, 128, 128, 0),     # MQA, single valid slot
+        (1, 16, 2, 2048, 64, 512, 1500), # long cache, mid position
+    ],
+)
+def test_flash_decode_sweep(B, H, K, S, hd, bs, pos, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S + pos), 3)
+    q = jax.random.normal(ks[0], (B, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd)).astype(dtype)
+    got = ops.flash_decode(q, k, v, jnp.int32(pos), block_s=bs,
+                           interpret=True)
+    want = ops.flash_decode_ref(q, k, v, jnp.int32(pos))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol(dtype),
+    )
+
+
+def test_flash_decode_matches_model_decode_attention():
+    """Kernel == the model's decode_attention math (post cache update)."""
+    import dataclasses
+
+    from repro.configs import registry
+    from repro.models import layers as L
+
+    cfg = dataclasses.replace(
+        registry.get_smoke_config("internlm2_20b"), rope_fraction=0.0
+    )
+    B, S = 2, 64
+    K, H, hd = cfg.n_kv_heads, cfg.n_heads, cfg.resolved_head_dim
+    key = jax.random.PRNGKey(0)
+    p = L.init_attention(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, 1, cfg.d_model))
+    ck = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
+    cv = jax.random.normal(jax.random.fold_in(key, 3), (B, S, K, hd))
+    pos = jnp.int32(40)
+    y_model, (ck2, cv2) = L.decode_attention(p, x, cfg, ck, cv, pos)
+
+    # rebuild the same q and the updated cache, then run the kernel
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, 0]  # [B,H,hd]
+    y_kernel = ops.flash_decode(q, ck2, cv2, pos, block_s=32,
+                                interpret=True)
+    y_kernel = jnp.einsum(
+        "bhk,hkd->bd", y_kernel, p["wo"]
+    )[:, None, :]
+    np.testing.assert_allclose(
+        np.asarray(y_kernel), np.asarray(y_model), rtol=2e-4, atol=2e-4
+    )

@@ -1,0 +1,165 @@
+"""Policy tests: Algorithm-1 faithfulness, feasibility properties,
+optimality gap vs the exact knapsack oracle."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import dpp
+from repro.core.policies import (
+    CarbonIntensityPolicy,
+    ExactDPPPolicy,
+    QueueLengthPolicy,
+    RandomPolicy,
+    literal_algorithm1,
+)
+from repro.core.queueing import NetworkSpec, NetworkState, is_feasible
+
+
+def make_spec(rng, M, N):
+    return NetworkSpec(
+        pe=rng.uniform(1.0, 8.0, M).astype(np.float32),
+        pc=rng.uniform(2.0, 100.0, (M, N)).astype(np.float32),
+        Pe=float(rng.uniform(20, 200)),
+        Pc=rng.uniform(50, 500, N).astype(np.float32),
+    )
+
+
+def make_state(rng, M, N, qmax=200):
+    return NetworkState(
+        Qe=jnp.asarray(rng.integers(0, qmax, M).astype(np.float32)),
+        Qc=jnp.asarray(rng.integers(0, qmax, (M, N)).astype(np.float32)),
+    )
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_vectorized_matches_literal_algorithm1(seed):
+    """The fixed-shape scan implementation == pure-Python transcription."""
+    rng = np.random.default_rng(seed)
+    M, N = int(rng.integers(1, 7)), int(rng.integers(1, 6))
+    spec = make_spec(rng, M, N)
+    state = make_state(rng, M, N)
+    Ce = jnp.float32(rng.uniform(0, 700))
+    Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+    V = 0.05
+    pol = CarbonIntensityPolicy(V=V)
+    got = pol(state, spec, Ce, Cc, None, None)
+    want = literal_algorithm1(state, spec, Ce, Cc, V)
+    np.testing.assert_allclose(np.asarray(got.d), np.asarray(want.d), atol=0)
+    np.testing.assert_allclose(np.asarray(got.w), np.asarray(want.w), atol=0)
+
+
+@pytest.mark.parametrize(
+    "policy",
+    [
+        CarbonIntensityPolicy(V=0.05),
+        CarbonIntensityPolicy(V=0.05, stop_at_first_unfit=False),
+        CarbonIntensityPolicy(V=0.05, literal_edge_budget=True),
+        QueueLengthPolicy(),
+        RandomPolicy(),
+    ],
+    ids=["alg1", "alg1-nofirstfit", "alg1-literal", "queuelen", "random"],
+)
+@pytest.mark.parametrize("seed", range(5))
+def test_policies_always_feasible(policy, seed):
+    rng = np.random.default_rng(seed)
+    M, N = int(rng.integers(1, 8)), int(rng.integers(1, 7))
+    spec = make_spec(rng, M, N)
+    state = make_state(rng, M, N, qmax=1000)
+    Ce = jnp.float32(rng.uniform(0, 700))
+    Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+    a = jnp.asarray(rng.integers(0, 50, M).astype(np.float32))
+    act = policy(state, spec, Ce, Cc, a, jax.random.PRNGKey(seed))
+    assert bool(is_feasible(spec, act)), (
+        np.asarray(act.d),
+        np.asarray(act.w),
+    )
+    # never dispatch/process more than waiting
+    assert np.all(np.asarray(act.d).sum(1) <= np.asarray(state.Qe) + 1e-6)
+    assert np.all(np.asarray(act.w) <= np.asarray(state.Qc) + 1e-6)
+
+
+def test_zero_carbon_means_process_everything_affordable():
+    """With Cc=0 the processing score is -Qc<0: clouds drain greedily."""
+    rng = np.random.default_rng(1)
+    spec = make_spec(rng, 2, 1)
+    state = NetworkState(
+        Qe=jnp.zeros(2), Qc=jnp.asarray([[3.0], [2.0]])
+    )
+    pol = CarbonIntensityPolicy(V=0.05, stop_at_first_unfit=False)
+    act = pol(state, spec, jnp.float32(0.0), jnp.zeros(1), None, None)
+    pc = np.asarray(spec.pc)
+    # greedy fills by backlog-per-energy until budget exhausted
+    spent = float((np.asarray(act.w) * pc).sum())
+    assert spent <= float(np.asarray(spec.Pc)[0]) + 1e-4
+    assert float(np.asarray(act.w).sum()) > 0
+
+
+def test_high_carbon_means_idle():
+    """If V*C*p > Q everywhere, all scores positive -> do nothing."""
+    rng = np.random.default_rng(2)
+    spec = make_spec(rng, 3, 2)
+    state = make_state(rng, 3, 2, qmax=3)
+    pol = CarbonIntensityPolicy(V=100.0)
+    act = pol(state, spec, jnp.float32(700.0), jnp.full(2, 700.0), None, None)
+    assert float(np.asarray(act.w).sum()) == 0
+    assert float(np.asarray(act.d).sum()) == 0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_greedy_vs_exact_dpp_gap(seed):
+    """Surrogate value (19): with integral energies and grid == budget the
+    knapsack DP is exact, so it is at least as good as the greedy, and the
+    greedy stays within 15% of the optimum (quantifies Algorithm 1's
+    NP-hardness concession on random small instances)."""
+    rng = np.random.default_rng(seed + 100)
+    M, N = 4, 3
+    budget = 96
+    spec = NetworkSpec(
+        pe=rng.integers(1, 8, M).astype(np.float32),
+        pc=rng.integers(2, 20, (M, N)).astype(np.float32),
+        Pe=float(budget),
+        Pc=np.full(N, float(budget), np.float32),
+    )
+    state = make_state(rng, M, N, qmax=60)
+    Ce = jnp.float32(rng.uniform(0, 300))
+    Cc = jnp.asarray(rng.uniform(0, 300, N).astype(np.float32))
+    greedy = CarbonIntensityPolicy(V=0.05, stop_at_first_unfit=False)(
+        state, spec, Ce, Cc, None, None
+    )
+    exact = ExactDPPPolicy(V=0.05, grid=budget)(state, spec, Ce, Cc, None, None)
+    v_g = float(dpp.surrogate_value(state, spec, greedy, Ce, Cc, 0.05))
+    v_e = float(dpp.surrogate_value(state, spec, exact, Ce, Cc, 0.05))
+    assert bool(is_feasible(spec, exact))
+    assert v_e <= v_g + 1e-3  # exact at least as good
+    if v_e < -1e-6:
+        assert v_g <= 0.85 * v_e  # greedy within 15% of optimum
+
+
+def test_queue_length_policy_is_carbon_blind():
+    rng = np.random.default_rng(3)
+    spec = make_spec(rng, 3, 2)
+    state = make_state(rng, 3, 2)
+    pol = QueueLengthPolicy()
+    a1 = pol(state, spec, jnp.float32(0.0), jnp.zeros(2), None, None)
+    a2 = pol(state, spec, jnp.float32(700.0), jnp.full(2, 700.0), None, None)
+    np.testing.assert_array_equal(np.asarray(a1.d), np.asarray(a2.d))
+    np.testing.assert_array_equal(np.asarray(a1.w), np.asarray(a2.w))
+
+
+def test_policy_jits_and_vmaps():
+    rng = np.random.default_rng(4)
+    spec = make_spec(rng, 3, 2)
+    state = make_state(rng, 3, 2)
+    pol = CarbonIntensityPolicy(V=0.05)
+    jitted = jax.jit(lambda s, Ce, Cc: pol(s, spec, Ce, Cc, None, None))
+    act = jitted(state, jnp.float32(100.0), jnp.full(2, 100.0))
+    assert act.d.shape == (3, 2)
+    # vmap over carbon intensities (spatial what-if analysis)
+    batch = jax.vmap(lambda Ce: pol(state, spec, Ce, jnp.full(2, 100.0), None, None))(
+        jnp.linspace(0.0, 700.0, 8)
+    )
+    assert batch.w.shape == (8, 3, 2)

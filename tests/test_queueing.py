@@ -1,0 +1,117 @@
+"""Unit + property tests for the virtual queueing network (paper §III)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import queueing as Q
+
+jax.config.update("jax_enable_x64", False)
+
+
+def small_spec(M=3, N=2):
+    return Q.NetworkSpec(
+        pe=np.array([2.0, 3.0, 5.0][:M], np.float32),
+        pc=np.arange(1, M * N + 1, dtype=np.float32).reshape(M, N) * 3.0,
+        Pe=50.0,
+        Pc=np.full((N,), 100.0, np.float32),
+    )
+
+
+def test_step_matches_equations_7_8():
+    spec = small_spec()
+    state = Q.NetworkState(
+        Qe=jnp.array([5.0, 0.0, 2.0]),
+        Qc=jnp.array([[1.0, 0.0], [4.0, 2.0], [0.0, 0.0]]),
+    )
+    d = jnp.array([[2.0, 1.0], [0.0, 0.0], [3.0, 0.0]])
+    w = jnp.array([[1.0, 0.0], [5.0, 1.0], [0.0, 0.0]])
+    a = jnp.array([1.0, 2.0, 0.0])
+    nxt = Q.step(state, Q.Action(d, w), a)
+    # eq (7): max(Qe - sum_n d, 0) + a
+    np.testing.assert_allclose(
+        np.asarray(nxt.Qe), [max(5 - 3, 0) + 1, 0 + 2, max(2 - 3, 0) + 0]
+    )
+    # eq (8): max(Qc - w, 0) + d
+    np.testing.assert_allclose(
+        np.asarray(nxt.Qc),
+        [[max(1 - 1, 0) + 2, 0 + 1], [max(4 - 5, 0) + 0, max(2 - 1, 0)], [3, 0]],
+    )
+
+
+def test_emissions_eq5():
+    spec = small_spec()
+    d = jnp.ones((3, 2))
+    w = jnp.ones((3, 2)) * 2
+    Ce, Cc = jnp.float32(10.0), jnp.array([1.0, 2.0])
+    got = Q.emissions(spec, Q.Action(d, w), Ce, Cc)
+    pe_total = float(np.sum(np.asarray(spec.pe)[:, None] * np.asarray(d)))
+    pc_total = np.sum(np.asarray(spec.pc) * np.asarray(w), axis=0)
+    want = 10.0 * pe_total + np.dot([1.0, 2.0], pc_total)
+    np.testing.assert_allclose(float(got), want, rtol=1e-6)
+
+
+def test_feasibility_checks():
+    spec = small_spec()
+    ok = Q.Action(d=jnp.zeros((3, 2)), w=jnp.zeros((3, 2)))
+    assert bool(Q.is_feasible(spec, ok))
+    too_much_edge = Q.Action(d=jnp.full((3, 2), 100.0), w=jnp.zeros((3, 2)))
+    assert not bool(Q.is_feasible(spec, too_much_edge))
+    fractional = Q.Action(d=jnp.full((3, 2), 0.5), w=jnp.zeros((3, 2)))
+    assert not bool(Q.is_feasible(spec, fractional))
+    negative = Q.Action(d=jnp.zeros((3, 2)), w=-jnp.ones((3, 2)))
+    assert not bool(Q.is_feasible(spec, negative))
+
+
+@given(
+    Qe=hnp.arrays(np.float32, (3,), elements=st.integers(0, 50).map(float)),
+    Qc=hnp.arrays(np.float32, (3, 2), elements=st.integers(0, 50).map(float)),
+    d=hnp.arrays(np.float32, (3, 2), elements=st.integers(0, 20).map(float)),
+    w=hnp.arrays(np.float32, (3, 2), elements=st.integers(0, 20).map(float)),
+    a=hnp.arrays(np.float32, (3,), elements=st.integers(0, 20).map(float)),
+)
+@settings(max_examples=50, deadline=None)
+def test_queues_stay_nonnegative_and_integral(Qe, Qc, d, w, a):
+    state = Q.NetworkState(Qe=jnp.asarray(Qe), Qc=jnp.asarray(Qc))
+    nxt = Q.step(state, Q.Action(jnp.asarray(d), jnp.asarray(w)), jnp.asarray(a))
+    assert np.all(np.asarray(nxt.Qe) >= 0)
+    assert np.all(np.asarray(nxt.Qc) >= 0)
+    assert np.all(np.asarray(nxt.Qe) == np.round(np.asarray(nxt.Qe)))
+    assert np.all(np.asarray(nxt.Qc) == np.round(np.asarray(nxt.Qc)))
+
+
+def test_lyapunov_eq15():
+    state = Q.NetworkState(
+        Qe=jnp.array([3.0, 4.0]), Qc=jnp.array([[1.0], [2.0]])
+    )
+    assert float(Q.lyapunov(state)) == 0.5 * (9 + 16 + 1 + 4)
+
+
+def test_drift_bound_B_dominates_realized_terms(rng):
+    """B from (18): 2B >= sum a^2 + sum(sum_n d)^2 + sum d^2 + sum w^2 for
+    any feasible action and bounded arrivals."""
+    spec = small_spec()
+    B = float(Q.drift_bound_B(spec, a_max=np.full(3, 10.0)))
+    for _ in range(200):
+        a = rng.integers(0, 11, 3).astype(float)
+        # random feasible action via rejection
+        d = rng.integers(0, 5, (3, 2)).astype(float)
+        w = rng.integers(0, 5, (3, 2)).astype(float)
+        if float(Q.edge_energy(jnp.asarray(spec.pe), jnp.asarray(d))) > spec.Pe:
+            continue
+        if np.any(
+            np.asarray(Q.cloud_energy(jnp.asarray(spec.pc), jnp.asarray(w)))
+            > np.asarray(spec.Pc)
+        ):
+            continue
+        lhs = (
+            np.sum(a**2)
+            + np.sum(d.sum(1) ** 2)
+            + np.sum(d**2)
+            + np.sum(w**2)
+        )
+        assert lhs <= 2 * B + 1e-5

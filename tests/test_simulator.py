@@ -1,0 +1,120 @@
+"""Simulator integration tests: stability, emissions accounting, repro of
+paper's headline comparisons at reduced horizon."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CarbonIntensityPolicy,
+    QueueLengthPolicy,
+    RandomCarbonSource,
+    UKRegionalTraceSource,
+    UniformArrivals,
+    simulate,
+    simulate_vsweep,
+)
+from repro.configs.paper_workloads import V_PAPER, paper_spec
+
+
+@pytest.fixture(scope="module")
+def results():
+    spec = paper_spec()
+    key = jax.random.PRNGKey(0)
+    T = 800
+    carbon = RandomCarbonSource(N=5)
+    arrive = UniformArrivals(M=5, amax=400)
+    rc = jax.jit(
+        lambda: simulate(
+            CarbonIntensityPolicy(V=V_PAPER), spec, carbon, arrive, T, key
+        )
+    )()
+    rq = jax.jit(
+        lambda: simulate(QueueLengthPolicy(), spec, carbon, arrive, T, key)
+    )()
+    return rc, rq, T
+
+
+def test_emission_accounting_consistent(results):
+    rc, _, _ = results
+    np.testing.assert_allclose(
+        np.asarray(rc.cum_emissions),
+        np.cumsum(np.asarray(rc.emissions)),
+        rtol=1e-5,
+    )
+    assert np.all(np.asarray(rc.emissions) >= 0)
+
+
+def test_energy_constraints_never_violated(results):
+    rc, rq, _ = results
+    spec = paper_spec()
+    for r in (rc, rq):
+        assert np.all(np.asarray(r.energy_edge) <= spec.Pe + 1e-2)
+        assert np.all(
+            np.asarray(r.energy_cloud) <= np.asarray(spec.Pc)[None, :] + 1e-2
+        )
+
+
+def test_carbon_policy_beats_queue_policy(results):
+    rc, rq, _ = results
+    red = 1 - float(rc.cum_emissions[-1]) / float(rq.cum_emissions[-1])
+    # paper reports 63% at T~2000; at T=800 with our seed it's > 50%
+    assert red > 0.45, f"only {red:.2%} reduction"
+
+
+def test_mean_rate_stability(results):
+    rc, _, T = results
+    # backlog grows sublinearly: Q(T)/T small and decreasing in T
+    backlog_frac = float(rc.final_backlog) / T
+    assert backlog_frac < 60.0
+    # stronger: windowed averages of Qe flatten out (no linear blowup)
+    qe = np.asarray(rc.Qe).sum(1)
+    first, last = qe[: T // 4].mean(), qe[-T // 4 :].mean()
+    assert last < 50 * max(first, 1.0)
+
+
+def test_realworld_trace_reduction():
+    spec = paper_spec()
+    key = jax.random.PRNGKey(0)
+    T = 600
+    carbon = UKRegionalTraceSource(N=5)
+    arrive = UniformArrivals(M=5, amax=400)
+    rc = simulate(CarbonIntensityPolicy(V=V_PAPER), spec, carbon, arrive, T, key)
+    rq = simulate(QueueLengthPolicy(), spec, carbon, arrive, T, key)
+    red = 1 - float(rc.cum_emissions[-1]) / float(rq.cum_emissions[-1])
+    assert red > 0.35  # paper: 54% at T~2000
+
+
+def test_vsweep_tradeoff_monotone():
+    """Theorem 1: larger V -> lower emissions, larger queues (Fig 2+4)."""
+    spec = paper_spec()
+    Vs = jnp.array([0.005, 0.05, 0.5])
+    res = simulate_vsweep(
+        lambda V: CarbonIntensityPolicy(V=V),
+        Vs,
+        spec,
+        RandomCarbonSource(N=5),
+        UniformArrivals(M=5, amax=400),
+        500,
+        jax.random.PRNGKey(1),
+    )
+    cum = np.asarray(res.cum_emissions[:, -1])
+    qe_mean = np.asarray(res.Qe).mean((1, 2))
+    assert cum[0] > cum[1] > cum[2]
+    assert qe_mean[0] < qe_mean[2]
+
+
+def test_simulation_deterministic_given_key():
+    spec = paper_spec()
+    args = (
+        CarbonIntensityPolicy(V=0.05),
+        spec,
+        RandomCarbonSource(N=5),
+        UniformArrivals(M=5, amax=400),
+        100,
+        jax.random.PRNGKey(7),
+    )
+    r1, r2 = simulate(*args), simulate(*args)
+    np.testing.assert_array_equal(
+        np.asarray(r1.cum_emissions), np.asarray(r2.cum_emissions)
+    )
