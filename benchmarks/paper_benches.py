@@ -148,44 +148,100 @@ def bench_vsweep() -> List[Row]:
     ]
 
 
+def _random_instance(rng, M, N):
+    from repro.core.queueing import NetworkSpec, NetworkState
+
+    spec = NetworkSpec(
+        pe=rng.uniform(1, 8, M).astype(np.float32),
+        pc=rng.uniform(2, 100, (M, N)).astype(np.float32),
+        Pe=1e4,
+        Pc=rng.uniform(1e3, 1e5, N).astype(np.float32),
+    )
+    state = NetworkState(
+        Qe=jnp.asarray(rng.integers(0, 1000, M).astype(np.float32)),
+        Qc=jnp.asarray(rng.integers(0, 1000, (M, N)).astype(np.float32)),
+    )
+    Ce = jnp.float32(300.0)
+    Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+    return spec, state, Ce, Cc
+
+
 def bench_policy_throughput() -> List[Row]:
     """Scheduler scalability: per-slot decision latency vs problem size
-    (paper complexity claim: ~O(MN log MN)); plus the fused Pallas score
-    kernel vs the jnp reference at the largest size."""
+    (paper complexity claim: ~O(MN log MN))."""
     from repro.core.policies import CarbonIntensityPolicy
-    from repro.core.queueing import NetworkSpec, NetworkState
-    from repro.kernels import ops
 
     rows = []
     rng = np.random.default_rng(0)
     pol = CarbonIntensityPolicy(V=0.05)
     for M, N in [(5, 5), (64, 16), (512, 64), (2048, 256)]:
-        spec = NetworkSpec(
-            pe=rng.uniform(1, 8, M).astype(np.float32),
-            pc=rng.uniform(2, 100, (M, N)).astype(np.float32),
-            Pe=1e4,
-            Pc=rng.uniform(1e3, 1e5, N).astype(np.float32),
-        )
-        state = NetworkState(
-            Qe=jnp.asarray(rng.integers(0, 1000, M).astype(np.float32)),
-            Qc=jnp.asarray(rng.integers(0, 1000, (M, N)).astype(np.float32)),
-        )
-        Ce = jnp.float32(300.0)
-        Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+        spec, state, Ce, Cc = _random_instance(rng, M, N)
         f = jax.jit(lambda s: pol(s, spec, Ce, Cc, None, None))
         us = _timeit(lambda: f(state), n=10)
         rows.append((f"policy/M{M}xN{N}", us, M * N))
+    return rows
 
-    # fused score kernel (interpret on CPU; compiled on TPU)
-    M, N = 2048, 256
-    Qc = jnp.asarray(rng.integers(0, 1000, (M, N)).astype(np.float32))
-    pc = jnp.asarray(rng.uniform(2, 100, (M, N)).astype(np.float32))
-    Qe = jnp.asarray(rng.integers(0, 1000, M).astype(np.float32))
-    pe = jnp.asarray(rng.uniform(1, 8, M).astype(np.float32))
-    Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
-    f_ref = jax.jit(lambda: ops.carbon_scores_ref(Qc, pc, Qe, pe, Cc,
-                                                  jnp.float32(15.0)))
-    rows.append(("score_ref/M2048xN256", _timeit(f_ref, 10), M * N))
+
+def bench_score_backends() -> List[Row]:
+    """Reference-vs-Pallas per-slot latency: the full policy with each
+    score backend, and the bare score pass, at fleet scale (M up to
+    4096). On CPU the kernel runs in interpret mode -- the entries are
+    the contract for the TPU numbers; derived = problem size M*N."""
+    from repro.core.policies import CarbonIntensityPolicy
+    from repro.kernels import ops
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for M, N in [(1024, 128), (4096, 256)]:
+        spec, state, Ce, Cc = _random_instance(rng, M, N)
+        for backend in ("reference", "pallas"):
+            pol = CarbonIntensityPolicy(
+                V=0.05, fast=True, score_backend=backend
+            )
+            f = jax.jit(lambda s, pol=pol: pol(s, spec, Ce, Cc, None, None))
+            us = _timeit(lambda: f(state), n=10)
+            rows.append((f"policy_{backend}/M{M}xN{N}", us, M * N))
+
+        # bare score pass (kernel contract vs jnp oracle)
+        Qc, pc = state.Qc, jnp.asarray(spec.pc)
+        Qe, pe = state.Qe, jnp.asarray(spec.pe)
+        f_ref = jax.jit(lambda: ops.carbon_scores_ref(
+            Qc, pc, Qe, pe, Cc, jnp.float32(15.0)
+        ))
+        rows.append((f"score_reference/M{M}xN{N}", _timeit(f_ref, 10),
+                     M * N))
+        f_pal = jax.jit(lambda: ops.carbon_scores(
+            Qc, pc, Qe, pe, Cc, jnp.float32(15.0)
+        ))
+        rows.append((f"score_pallas/M{M}xN{N}", _timeit(f_pal, 10), M * N))
+    return rows
+
+
+def bench_fleet() -> List[Row]:
+    """Fleet-scale scenario sweeps: >= 64 stacked region x workload-mix
+    instances simulated in ONE jitted call. us_per_call is per
+    instance-slot; derived = mean emission reduction (%) of the carbon
+    policy vs the queue-length baseline across the fleet."""
+    from repro.configs.fleet_scenarios import build_fleet
+    from repro.core import (
+        CarbonIntensityPolicy, QueueLengthPolicy, simulate_fleet,
+    )
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for F_per, T in [(16, 200), (32, 100)]:  # F = 64, 128
+        fleet = build_fleet(per_kind=F_per, Tc=96, seed=0)
+        F = fleet.F
+
+        def final(policy):
+            return simulate_fleet(policy, fleet, T, key).cum_emissions[:, -1]
+
+        f_carb = jax.jit(lambda: final(CarbonIntensityPolicy(V=0.05)))
+        us = _timeit(f_carb, n=3)
+        base = np.asarray(jax.jit(lambda: final(QueueLengthPolicy()))())
+        carb = np.asarray(f_carb())
+        reduction = float(100.0 * (1 - (carb / base).mean()))
+        rows.append((f"fleet/F{F}xT{T}", us / (F * T), reduction))
     return rows
 
 
@@ -196,4 +252,6 @@ ALL_BENCHES = [
     bench_fig4_queues,
     bench_vsweep,
     bench_policy_throughput,
+    bench_score_backends,
+    bench_fleet,
 ]

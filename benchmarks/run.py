@@ -1,8 +1,13 @@
 """Benchmark harness: one function per paper table/figure + roofline.
 Prints ``name,us_per_call,derived`` CSV and writes artifacts/bench/.
+
+``--only SUBSTR`` (repeatable) selects benches whose function name
+contains SUBSTR; a filtered run merges its rows into the existing
+results.json instead of clobbering the full set.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 from pathlib import Path
@@ -13,10 +18,18 @@ ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 def main() -> None:
     from benchmarks.paper_benches import ALL_BENCHES
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", action="append", default=[])
+    args = ap.parse_args()
+    benches = [
+        b for b in ALL_BENCHES
+        if not args.only or any(s in b.__name__ for s in args.only)
+    ]
+
     ART.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     all_rows = []
-    for bench in ALL_BENCHES:
+    for bench in benches:
         rows = bench()
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived:.4f}")
@@ -37,7 +50,14 @@ def main() -> None:
     except Exception as e:  # dry-run not executed yet
         print(f"# roofline skipped: {e}", file=sys.stderr)
 
-    (ART / "results.json").write_text(json.dumps(all_rows, indent=2))
+    out = ART / "results.json"
+    if args.only and out.exists():
+        kept = [
+            r for r in json.loads(out.read_text())
+            if r["name"] not in {x["name"] for x in all_rows}
+        ]
+        all_rows = kept + all_rows
+    out.write_text(json.dumps(all_rows, indent=2))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,134 @@
+"""Fleet scenario registry: named region x workload-mix generators that
+stack into one `FleetScenario` for `simulate_fleet`.
+
+Each generator produces ONE simulation instance
+(NetworkSpec, carbon_table [Tc, N+1], arrival_amax [M]) from an
+instance-local RNG; `build_fleet` fans a list of scenario names out to
+`per_kind` instances each and stacks them, so
+
+    fleet = build_fleet(["diurnal", "bursty"], per_kind=32)
+    res = jax.jit(lambda k: simulate_fleet(policy, fleet, T, k))(key)
+
+sweeps 64 scenarios in one compiled call. Scenarios:
+
+  * diurnal             -- paper workload mix under smooth day/night
+                           carbon cycles with per-region phase jitter.
+  * bursty              -- rare multi-slot carbon spikes + heavy-tailed
+                           per-type arrival caps (flash crowds).
+  * heterogeneous-fleet -- per-instance scaling of task energies and
+                           cloud budgets (mixed hardware generations).
+  * multi-region-uk     -- National-Grid-ESO-style UK regional traces
+                           with the region->site assignment rotated per
+                           instance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.paper_workloads import A_MAX, paper_spec
+from repro.core.carbon import (
+    _UK_REGIONS,
+    bursty_table,
+    diurnal_table,
+    uk_regional_table,
+)
+from repro.core.queueing import NetworkSpec
+from repro.core.simulator import FleetScenario, stack_scenarios
+
+Instance = Tuple[NetworkSpec, np.ndarray, np.ndarray]
+
+
+def _base(M: int, N: int) -> NetworkSpec:
+    """Paper Table-I spec tiled/truncated to (M, N)."""
+    base = paper_spec()
+    pe = np.resize(np.asarray(base.pe, np.float32), M)
+    pc_col = np.resize(np.asarray(base.pc, np.float32)[:, 0], M)
+    pc = np.tile(pc_col[:, None], (1, N))
+    scale = (M / base.M) * (N / base.N)
+    return NetworkSpec(
+        pe=pe,
+        pc=pc,
+        Pe=float(base.Pe) * (M / base.M),
+        Pc=np.full((N,), float(np.asarray(base.Pc)[0]) * scale / N,
+                   np.float32),
+    )
+
+
+def diurnal(M: int, N: int, Tc: int, rng: np.random.Generator) -> Instance:
+    spec = _base(M, N)
+    amax = np.full((M,), float(A_MAX), np.float32)
+    return spec, diurnal_table(Tc, N, rng), amax
+
+
+def bursty(M: int, N: int, Tc: int, rng: np.random.Generator) -> Instance:
+    spec = _base(M, N)
+    # Heavy-tailed workload mix: a few hot types, many cold ones.
+    amax = np.round(
+        A_MAX * rng.pareto(1.5, M).clip(0.05, 4.0)
+    ).astype(np.float32)
+    return spec, bursty_table(Tc, N, rng), amax
+
+
+def heterogeneous_fleet(
+    M: int, N: int, Tc: int, rng: np.random.Generator
+) -> Instance:
+    base = _base(M, N)
+    # Mixed hardware generations: per-cloud energy efficiency and budget
+    # spread, per-type edge-link cost spread.
+    eff = rng.uniform(0.5, 2.0, (1, N)).astype(np.float32)
+    spec = dataclasses.replace(
+        base,
+        pe=np.asarray(base.pe) * rng.uniform(0.5, 2.0, M).astype(np.float32),
+        pc=np.asarray(base.pc) * eff,
+        Pc=np.asarray(base.Pc) * rng.uniform(0.4, 1.6, N).astype(np.float32),
+    )
+    amax = np.round(A_MAX * rng.uniform(0.3, 1.5, M)).astype(np.float32)
+    return spec, diurnal_table(Tc, N, rng), amax
+
+
+def multi_region_uk(
+    M: int, N: int, Tc: int, rng: np.random.Generator
+) -> Instance:
+    spec = _base(M, N)
+    amax = np.full((M,), float(A_MAX), np.float32)
+    table = uk_regional_table(
+        Tc, N, seed=int(rng.integers(1 << 30)),
+        rotate=int(rng.integers(len(_UK_REGIONS))),
+    )
+    return spec, table, amax
+
+
+SCENARIOS: Dict[str, Callable[..., Instance]] = {
+    "diurnal": diurnal,
+    "bursty": bursty,
+    "heterogeneous-fleet": heterogeneous_fleet,
+    "multi-region-uk": multi_region_uk,
+}
+
+
+def build_fleet(
+    kinds: Sequence[str] = tuple(SCENARIOS),
+    per_kind: int = 16,
+    M: int = 5,
+    N: int = 5,
+    Tc: int = 96,
+    seed: int = 0,
+) -> FleetScenario:
+    """Stacks `per_kind` instances of every named scenario (F = len(kinds)
+    * per_kind). Unknown names raise KeyError listing the registry."""
+    instances = []
+    for i, kind in enumerate(kinds):
+        try:
+            gen = SCENARIOS[kind]
+        except KeyError:
+            raise KeyError(
+                f"unknown scenario {kind!r}; registered: "
+                f"{sorted(SCENARIOS)}"
+            ) from None
+        for j in range(per_kind):
+            rng = np.random.default_rng((seed, i, j))
+            instances.append(gen(M, N, Tc, rng))
+    return stack_scenarios(instances)

@@ -22,13 +22,20 @@ from repro.core.carbon import (
     RandomCarbonSource,
     TableCarbonSource,
     UKRegionalTraceSource,
+    bursty_table,
+    diurnal_table,
+    uk_regional_table,
 )
 from repro.core.simulator import (
+    FleetScenario,
+    FleetSpec,
     PoissonArrivals,
     SimResult,
     UniformArrivals,
     simulate,
+    simulate_fleet,
     simulate_vsweep,
+    stack_scenarios,
 )
 
 __all__ = [
@@ -49,11 +56,18 @@ __all__ = [
     "RandomCarbonSource",
     "TableCarbonSource",
     "UKRegionalTraceSource",
+    "bursty_table",
+    "diurnal_table",
+    "uk_regional_table",
+    "FleetScenario",
+    "FleetSpec",
     "PoissonArrivals",
     "SimResult",
     "UniformArrivals",
     "simulate",
+    "simulate_fleet",
     "simulate_vsweep",
+    "stack_scenarios",
 ]
 
 from repro.core.extensions import (  # noqa: E402

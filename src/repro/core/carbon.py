@@ -154,6 +154,68 @@ def from_eso_csv(path: str, n_regions: int) -> TableCarbonSource:
     return TableCarbonSource(table=table)
 
 
+# --------------------------------------------------------------------------
+# Scenario table generators (fleet sweeps). Each returns a [T, N+1] numpy
+# playback table (col 0 = edge region) for TableCarbonSource /
+# FleetScenario.carbon. Pure numpy so scenario construction happens once
+# on host; the simulator only ever sees the finished table.
+
+
+def diurnal_table(
+    T: int,
+    N: int,
+    rng: np.random.Generator,
+    mean: float = 220.0,
+    amp: float = 90.0,
+    noise: float = 20.0,
+    slots_per_day: int = _SLOTS_PER_DAY,
+) -> np.ndarray:
+    """Smooth day/night cycle with per-region phase/mean jitter."""
+    t = np.arange(T)[:, None]
+    phase = rng.uniform(0, 2 * np.pi, (1, N + 1))
+    means = mean * rng.uniform(0.6, 1.4, (1, N + 1))
+    day = 2 * np.pi * (t % slots_per_day) / slots_per_day
+    tab = means + amp * np.sin(day - phase) + noise * rng.normal(
+        size=(T, N + 1)
+    )
+    return np.clip(tab, 5.0, 700.0).astype(np.float32)
+
+
+def bursty_table(
+    T: int,
+    N: int,
+    rng: np.random.Generator,
+    base: float = 120.0,
+    spike: float = 450.0,
+    p_spike: float = 0.05,
+    spike_len: int = 6,
+) -> np.ndarray:
+    """Low baseline with rare, multi-slot, region-local intensity spikes
+    (grid stress events / fossil peaker dispatch)."""
+    tab = base * rng.uniform(0.7, 1.3, (T, N + 1))
+    starts = rng.random((T, N + 1)) < p_spike
+    for dt in range(spike_len):
+        rolled = np.roll(starts, dt, axis=0)
+        rolled[:dt] = False
+        tab = np.where(rolled, tab + spike * (1 - dt / spike_len), tab)
+    tab += 15.0 * rng.normal(size=(T, N + 1))
+    return np.clip(tab, 5.0, 700.0).astype(np.float32)
+
+
+def uk_regional_table(
+    T: int, N: int, seed: int = 2022, rotate: int = 0
+) -> np.ndarray:
+    """Materializes UKRegionalTraceSource with the ESO region parameters
+    rotated by `rotate` -- a fleet of rotations covers every assignment of
+    regions to the edge and clouds (multi-region sweep)."""
+    R = len(_UK_REGIONS)
+    regions = tuple(
+        _UK_REGIONS[(i + rotate) % R] for i in range(N + 1)
+    )
+    src = UKRegionalTraceSource(N=N, seed=seed, regions=regions)
+    return materialize(src, T)
+
+
 def materialize(source, T: int, key: Array | None = None) -> np.ndarray:
     """Renders any source to a [T, N+1] table (useful for plots/benches)."""
     if key is None:

@@ -25,7 +25,7 @@ Notes vs. the paper's pseudocode (documented in DESIGN.md):
   * `stop_at_first_unfit=True` reproduces the pseudocode's `break` when
     the current type no longer fits the remaining budget. The improved
     variant (False) keeps scanning cheaper types -- a strictly better
-    knapsack fill (see EXPERIMENTS.md §Perf-policy).
+    knapsack fill (see DESIGN.md §Perf-policy).
 """
 from __future__ import annotations
 
@@ -181,8 +181,18 @@ class CarbonIntensityPolicy:
 
     fast=True switches the greedy fill to the vectorized cumsum+window
     formulation (identical output, ~25x per-slot latency at M>=2048; see
-    §Perf iteration 4). Only valid with the faithful stop_at_first_unfit
-    semantics.
+    DESIGN.md §Perf-policy). Only valid with the faithful
+    stop_at_first_unfit semantics.
+
+    score_backend selects how the per-slot score pass (n1, b, c) is
+    computed:
+      * "reference" -- plain jnp (default; works everywhere, vmaps).
+      * "pallas"    -- the fused kernels.carbon_score.carbon_scores
+        kernel: one HBM sweep of Qc/pc produces the c-matrix and the
+        per-row (min, argmin) reduction. Falls back to interpret mode
+        off-TPU (score_interpret=None -> auto) and pads internally, so
+        any M/N works. Under jit both backends produce bit-identical
+        scores, hence bit-identical actions (tests/test_score_backend).
     """
 
     V: float = 0.05
@@ -190,6 +200,10 @@ class CarbonIntensityPolicy:
     literal_edge_budget: bool = False
     fast: bool = False
     fast_window: int = 64
+    score_backend: str = "reference"
+    score_block_m: int = 256
+    score_block_n: int = 256
+    score_interpret: bool | None = None
 
     def _fill(self, scores, energy, caps, budget):
         if self.fast and self.stop_at_first_unfit:
@@ -198,6 +212,29 @@ class CarbonIntensityPolicy:
             )
         return _greedy_fill(
             scores, energy, caps, budget, self.stop_at_first_unfit
+        )
+
+    def _scores(self, state, pe, pc, Ce, Cc, V):
+        """Score pass: (c [M,N], n1 [M], b [M]) via the selected backend."""
+        if self.score_backend == "pallas":
+            from repro.kernels import ops
+
+            # The kernel contract takes pre-scaled intensities: V*Cc for
+            # the c-matrix and V*Ce for the b-vector (same op order as
+            # the reference, so results agree bitwise under jit).
+            return ops.carbon_scores(
+                state.Qc, pc, state.Qe, pe, V * Cc, V * Ce,
+                block_m=self.score_block_m, block_n=self.score_block_n,
+                interpret=self.score_interpret,
+            )
+        if self.score_backend != "reference":
+            raise ValueError(
+                f"unknown score_backend {self.score_backend!r}"
+            )
+        from repro.kernels import ref
+
+        return ref.carbon_scores_ref(
+            state.Qc, pc, state.Qe, pe, V * Cc, V * Ce
         )
 
     def __call__(
@@ -213,10 +250,9 @@ class CarbonIntensityPolicy:
         pe, pc, Pe, Pc = spec.as_arrays()
         V = jnp.asarray(self.V, jnp.float32)
 
+        c, n1, b = self._scores(state, pe, pc, Ce, Cc, V)
+
         # --- Edge: dispatch each type to its emptiest cloud queue. -------
-        n1 = jnp.argmin(state.Qc, axis=1)  # [M]
-        Qc_n1 = jnp.take_along_axis(state.Qc, n1[:, None], axis=1)[:, 0]
-        b = V * Ce * pe + Qc_n1 - state.Qe  # b[m, n1(m)]
         if self.literal_edge_budget:
             d_counts = _literal_edge_fill(b, pe, state.Qe, Pe)
         else:
@@ -224,7 +260,6 @@ class CarbonIntensityPolicy:
         d = jnp.zeros_like(state.Qc).at[jnp.arange(spec.M), n1].set(d_counts)
 
         # --- Clouds: process most-backlogged-per-energy types. -----------
-        c = dpp.processing_scores(state, pc, Cc, V)  # [M,N]
 
         def per_cloud(c_n, pc_n, Qc_n, Pc_n):
             return self._fill(c_n, pc_n, Qc_n, Pc_n)

@@ -1,0 +1,31 @@
+"""JAX distributed API compatibility shims (same spirit as
+kernels/compat.py for Pallas).
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to a
+top-level ``jax.shard_map`` and renamed its replication-check kwarg
+``check_rep`` -> ``check_vma`` along the way. Feature-detect once so
+the expert-parallel MoE, the pipeline skeleton, and the runtime tests
+work across the installed range.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Dispatches to jax.shard_map (new) or experimental.shard_map (old),
+    translating check_vma to the old check_rep spelling."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+__all__ = ["shard_map"]

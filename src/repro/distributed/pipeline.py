@@ -86,7 +86,9 @@ def pipeline_apply(
         )
         return outs
 
-    fn = jax.shard_map(
+    from repro.distributed.compat import shard_map
+
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis), P()),    # params sharded by stage; x replicated

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 POS_INF = 1e30
 
 
@@ -77,11 +79,23 @@ def carbon_scores(
     block_n: int = 256,
     interpret: bool = False,
 ):
-    """Returns (c_scores [M,N] f32, n1 [M] int32, b [M] f32)."""
+    """Returns (c_scores [M,N] f32, n1 [M] int32, b [M] f32).
+
+    Arbitrary M/N: inputs are padded up to the block grid. Padded Qc
+    entries are +inf so they can never win the row argmin; padded rows /
+    columns are sliced off the outputs before returning.
+    """
     M, N = Qc.shape
     bm, bn = min(block_m, M), min(block_n, N)
-    assert M % bm == 0 and N % bn == 0, (M, bm, N, bn)
-    nm, nn = M // bm, N // bn
+    Mp, Np = -(-M // bm) * bm, -(-N // bn) * bn
+    if (Mp, Np) != (M, N):
+        dm, dn = Mp - M, Np - N
+        Qc = jnp.pad(Qc, ((0, dm), (0, dn)), constant_values=POS_INF)
+        pc = jnp.pad(pc, ((0, dm), (0, dn)), constant_values=1.0)
+        Qe = jnp.pad(Qe, (0, dm))
+        pe = jnp.pad(pe, (0, dm), constant_values=1.0)
+        Cc = jnp.pad(Cc, (0, dn))
+    nm, nn = Mp // bm, Np // bn
     c, n1, b = pl.pallas_call(
         functools.partial(_kernel, bn=bn, nn=nn),
         grid=(nm, nn),
@@ -99,15 +113,15 @@ def carbon_scores(
             pl.BlockSpec((bm, 1), lambda m, n: (m, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((M, N), jnp.float32),
-            jax.ShapeDtypeStruct((M, 1), jnp.int32),
-            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+            jax.ShapeDtypeStruct((Mp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bm, 1), jnp.float32),
             pltpu.VMEM((bm, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -116,4 +130,4 @@ def carbon_scores(
         Qc, pc, Qe[:, None], pe[:, None], Cc[None, :],
         jnp.asarray(V_Ce, jnp.float32)[None, None],
     )
-    return c, n1[:, 0], b[:, 0]
+    return c[:M, :N], n1[:M, 0], b[:M, 0]

@@ -1,0 +1,18 @@
+"""Pallas TPU API compatibility shims.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (the
+old spelling survives as a deprecated alias for a few releases, and older
+releases such as 0.4.x only have the TPU-prefixed name). Feature-detect
+once here so every kernel in this package works across the installed
+range instead of hard-coding one spelling.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:  # jax <= 0.4.x
+    CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(a_ref, x_ref, b_ref, c_ref,        # [1,1,l,bh] [1,1,l,bh,P] [1,1,l,N] [1,1,l,N]
             y_ref, s_ref, tot_ref):            # [1,1,l,bh,P] [1,1,bh,N,P] [1,1,bh]
@@ -94,7 +96,7 @@ def ssd_chunk_intra(
             jax.ShapeDtypeStruct((B, nc, H, N, P), jnp.float32),
             jax.ShapeDtypeStruct((B, nc, H), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,

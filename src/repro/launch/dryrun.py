@@ -49,6 +49,15 @@ _COLLECTIVES = (
 )
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on new jax, a list of
+    per-computation dicts on jax<=0.4.x -- normalize to one dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
+
+
 def parse_collective_bytes(hlo_text: str):
     """Sums result-shape bytes of every collective op in post-SPMD HLO.
 
@@ -162,7 +171,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     coll_bytes, coll_counts = parse_collective_bytes(hlo)
     t1 = time.time()
@@ -297,7 +306,7 @@ def _cell_costs(cfg, shape_name: str, multi_pod: bool,
         compiled = jax.jit(
             fn, in_shardings=in_shard, out_shardings=out_shard
         ).lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll_bytes, _ = parse_collective_bytes(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -172,7 +172,7 @@ def moe_ep_shardmap(
     the ep axis (e.g. decode steps with S=1) -- see apply_moe.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax import shard_map
+    from repro.distributed.compat import shard_map
 
     B, S, D = x.shape
     E = p["router"].shape[1]

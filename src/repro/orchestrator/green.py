@@ -169,6 +169,17 @@ class GreenOrchestrator:
                 Pc[n] = Pc[n] / c.measured_slowdown
         return dataclasses.replace(self.spec, Pc=Pc)
 
+    @staticmethod
+    def _slowdown(elapsed: float, deadline: float, expected: float) -> float:
+        """Observed/expected slot time ratio for the straggler EWMA.
+
+        A cloud that ran `expected` task-equivalents is on schedule when
+        elapsed ~= deadline * expected, so the denominator scales with
+        the expected count (clamped below at one task so an almost-idle
+        slot cannot divide by ~0 and explode the estimate).
+        """
+        return elapsed / (deadline * max(expected, 1.0))
+
     # -------------------------------------------------------------- run --
     def run_slot(self) -> Dict[str, float]:
         import jax.numpy as jnp
@@ -202,8 +213,7 @@ class GreenOrchestrator:
                             self.slot_deadline_s):
                         break
                     metrics = self.jobs[m].run_task()
-                    # emulated heterogeneity: slow clouds "take longer"
-                    expected += 1.0 / max(cloud.speed, 1e-3)
+                    expected += 1.0
                     done += 1
                     self.executed_tasks += 1
                     slot_metrics[f"loss/{self.jobs[m].name}"] = \
@@ -212,8 +222,12 @@ class GreenOrchestrator:
                 w[m, n] = done  # only what actually ran leaves the queue
             elapsed = time.monotonic() - t_start
             if self.slot_deadline_s is not None and expected > 0:
-                slowdown = elapsed / (
-                    self.slot_deadline_s * min(expected, 1.0)
+                # emulated heterogeneity: a declared-slow cloud observes
+                # inflated wall time (tasks run at real local speed, so
+                # the emulation must scale elapsed, not the expectation)
+                slowdown = self._slowdown(
+                    elapsed / max(cloud.speed, 1e-3),
+                    self.slot_deadline_s, expected,
                 )
                 cloud.measured_slowdown = (
                     0.7 * cloud.measured_slowdown + 0.3 * max(slowdown, 1.0)

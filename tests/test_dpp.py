@@ -1,4 +1,8 @@
 """Lemma-1 / drift-plus-penalty property tests."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: degrade to skips
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

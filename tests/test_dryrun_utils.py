@@ -113,7 +113,8 @@ def test_mini_dryrun_subprocess(tmp_path):
                     fn, in_shardings=(p_shard, o_shard, b_shard),
                     out_shardings=(p_shard, o_shard, None)
                 ).lower(pspecs, ospecs, batch).compile()
-            flops[sp] = float(compiled.cost_analysis().get("flops", 0))
+            from repro.launch.dryrun import _cost_dict
+            flops[sp] = float(_cost_dict(compiled).get("flops", 0))
         print(json.dumps({"flops": flops[False], "flops_sp": flops[True]}))
     """)
     out = subprocess.run(

@@ -151,6 +151,11 @@ def test_ssd_kernel_plugs_into_full_ssd():
         (512, 1024, 256, 256),
         (128, 128, 128, 128),
         (1024, 256, 256, 64),
+        # non-multiple-of-block shapes exercise the internal padding
+        (100, 37, 64, 16),
+        (257, 129, 128, 128),
+        (5, 5, 256, 256),
+        (300, 200, 128, 128),
     ],
 )
 def test_carbon_scores_sweep(M, N, bm, bn, dtype):

@@ -149,6 +149,39 @@ def test_dead_cloud_gets_zero_capacity():
     assert float(np.asarray(eff.Pc)[1]) == 0.0
 
 
+def test_slowdown_denominator_scales_with_expected_tasks():
+    """Regression: the estimator divided by min(expected, 1), so any
+    cloud running >1 task per slot looked pathologically slow and had
+    its Pc budget wrongly shrunk. The denominator must scale with the
+    expected task count."""
+    # 4 task-equivalents finishing in 2s against a 1s/task deadline is
+    # *ahead* of schedule (ratio 0.5), not 2x slow.
+    assert GreenOrchestrator._slowdown(2.0, 1.0, 4.0) == pytest.approx(0.5)
+    # a genuinely slow cloud is still flagged
+    assert GreenOrchestrator._slowdown(8.0, 1.0, 4.0) == pytest.approx(2.0)
+    # near-idle slots clamp the denominator at one expected task
+    assert GreenOrchestrator._slowdown(0.5, 1.0, 0.25) == pytest.approx(0.5)
+
+
+def test_busy_on_time_cloud_not_marked_straggler():
+    """A cloud that executes several tasks well within the slot deadline
+    keeps measured_slowdown ~1 and full effective capacity."""
+    orch = GreenOrchestrator(
+        jobs=make_jobs(), clouds=[Cloud("c0"), Cloud("c1")],
+        spec=make_spec(), carbon_source=ConstantCarbonSource(N=2),
+        arrival_fn=arrivals, policy=CarbonIntensityPolicy(V=0.001),
+        max_tasks_per_slot=3, slot_deadline_s=120.0,
+    )
+    orch.run(4)
+    assert orch.executed_tasks > 0
+    for cloud in orch.clouds:
+        assert cloud.measured_slowdown == pytest.approx(1.0, abs=1e-6)
+    eff = orch._effective_spec()
+    np.testing.assert_allclose(
+        np.asarray(eff.Pc), np.asarray(orch.spec.Pc)
+    )
+
+
 def test_straggler_capacity_shrinks():
     orch = GreenOrchestrator(
         jobs=make_jobs(), clouds=[Cloud("c0"), Cloud("c1")],

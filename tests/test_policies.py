@@ -1,5 +1,9 @@
 """Policy tests: Algorithm-1 faithfulness, feasibility properties,
 optimality gap vs the exact knapsack oracle."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: degrade to skips
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

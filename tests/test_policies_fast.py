@@ -1,4 +1,8 @@
 """Exactness tests for the vectorized fast greedy (§Perf iteration 4)."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: degrade to skips
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

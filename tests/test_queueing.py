@@ -1,4 +1,8 @@
 """Unit + property tests for the virtual queueing network (paper §III)."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: degrade to skips
+
 import hypothesis
 import hypothesis.strategies as st
 import jax

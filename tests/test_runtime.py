@@ -197,8 +197,9 @@ def test_compressed_psum_multidevice_subprocess():
             summed, state = comp.compressed_psum_grads(grads, state, "data")
             return summed["w"]
 
-        fn = jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                           out_specs=P(), check_vma=False)
+        from repro.distributed.compat import shard_map
+        fn = shard_map(body, mesh=mesh, in_specs=P("data"),
+                       out_specs=P(), check_vma=False)
         got = fn(g)
         want = jnp.sum(g, axis=0)
         err = float(jnp.max(jnp.abs(got - want)))
