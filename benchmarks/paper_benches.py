@@ -29,6 +29,10 @@ from repro.core import (
 
 Row = Tuple[str, float, float]
 
+# run.py --smoke flips this: benches shrink to CI-sized instances that
+# exercise every code path (compile + execute) without the full sweep.
+SMOKE = False
+
 
 def _timeit(fn, n=5) -> float:
     fn()  # compile
@@ -245,6 +249,87 @@ def bench_fleet() -> List[Row]:
     return rows
 
 
+def bench_forecast_lookahead() -> List[Row]:
+    """Lookahead-vs-myopic on the diurnal fleet scenarios (forecast
+    subsystem). derived = mean cumulative-emission reduction (%) vs the
+    myopic CarbonIntensityPolicy at the same V; us_per_call is per
+    instance-slot. The `la_H1` rows are the receding-horizon policy at
+    H=1, which is bit-identical to the myopic baseline by construction
+    (0% reduction expected); H>=4 with perfect forecasts must land a
+    real reduction -- that row is the acceptance gate for the forecast
+    subsystem. `backlog` rows report the price of deferral: final
+    backlog relative to myopic (derived = ratio in %)."""
+    from repro.configs.fleet_scenarios import build_fleet
+    from repro.core import (
+        CarbonIntensityPolicy, LookaheadDPPPolicy, simulate_fleet,
+    )
+    from repro.forecast import (
+        ClairvoyantTableForecaster, ForecastErrorModel,
+        PersistenceForecaster, SeasonalNaiveForecaster,
+    )
+
+    V = 0.2
+    per_kind, T = (2, 48) if SMOKE else (16, 192)
+    horizons = (1, 4) if SMOKE else (1, 4, 8, 16)
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for kind in ("diurnal", "diurnal-slack"):
+        fleet = build_fleet([kind], per_kind=per_kind, Tc=96, seed=0)
+        F = fleet.F
+
+        def run(policy, forecaster=None):
+            f = jax.jit(lambda: simulate_fleet(
+                policy, fleet, T, key, forecaster=forecaster
+            ))
+            f()  # compile
+            t0 = time.perf_counter()
+            res = f()
+            jax.block_until_ready(res.cum_emissions)
+            us = (time.perf_counter() - t0) * 1e6
+            em = np.asarray(res.cum_emissions[:, -1])
+            bl = np.asarray(
+                res.Qe[:, -1].sum(-1) + res.Qc[:, -1].sum((-2, -1))
+            )
+            return us, em, bl
+
+        _, em_base, bl_base = run(CarbonIntensityPolicy(V=V, fast=True))
+
+        def red(em):
+            return float(100.0 * (1.0 - (em / em_base)).mean())
+
+        configs = [
+            (f"la_H{H}_perfect",
+             LookaheadDPPPolicy(V=V, fast=True, H=H, discount=1.0,
+                                defer_weight=3.0),
+             ClairvoyantTableForecaster(H=H))
+            for H in horizons
+        ]
+        if not SMOKE:
+            noisy = ForecastErrorModel(noise=0.2, seed=7)
+            configs += [
+                ("la_H8_noisy20",
+                 LookaheadDPPPolicy(V=V, fast=True, H=8, discount=0.98,
+                                    defer_weight=2.0),
+                 ClairvoyantTableForecaster(H=8, error=noisy)),
+                ("la_H8_persistence",
+                 LookaheadDPPPolicy(V=V, fast=True, H=8, discount=0.98,
+                                    defer_weight=2.0),
+                 PersistenceForecaster(H=8)),
+                ("la_H8_seasonal",
+                 LookaheadDPPPolicy(V=V, fast=True, H=8, discount=0.98,
+                                    defer_weight=2.0),
+                 SeasonalNaiveForecaster(H=8, period=48)),
+            ]
+        for name, pol, fc in configs:
+            us, em, bl = run(pol, fc)
+            rows.append((f"forecast/{kind}/{name}", us / (F * T), red(em)))
+            rows.append((
+                f"forecast/{kind}/{name}/backlog", 0.0,
+                float(100.0 * (bl / bl_base).mean()),
+            ))
+    return rows
+
+
 ALL_BENCHES = [
     bench_table1,
     bench_fig2_random,
@@ -254,4 +339,5 @@ ALL_BENCHES = [
     bench_policy_throughput,
     bench_score_backends,
     bench_fleet,
+    bench_forecast_lookahead,
 ]

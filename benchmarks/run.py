@@ -3,7 +3,10 @@ Prints ``name,us_per_call,derived`` CSV and writes artifacts/bench/.
 
 ``--only SUBSTR`` (repeatable) selects benches whose function name
 contains SUBSTR; a filtered run merges its rows into the existing
-results.json instead of clobbering the full set.
+results.json instead of clobbering the full set. ``--smoke`` shrinks
+bench instances to CI size (every code path compiles and runs; the
+numbers are not representative) and prefixes row names with ``smoke/``
+so a smoke run can never clobber committed full-size results.
 """
 from __future__ import annotations
 
@@ -16,11 +19,14 @@ ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
 
 def main() -> None:
+    from benchmarks import paper_benches
     from benchmarks.paper_benches import ALL_BENCHES
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", action="append", default=[])
+    ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
+    paper_benches.SMOKE = args.smoke
     benches = [
         b for b in ALL_BENCHES
         if not args.only or any(s in b.__name__ for s in args.only)
@@ -31,6 +37,8 @@ def main() -> None:
     all_rows = []
     for bench in benches:
         rows = bench()
+        if args.smoke:
+            rows = [(f"smoke/{n}", u, d) for n, u, d in rows]
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived:.4f}")
         all_rows.extend(
@@ -51,7 +59,9 @@ def main() -> None:
         print(f"# roofline skipped: {e}", file=sys.stderr)
 
     out = ART / "results.json"
-    if args.only and out.exists():
+    # smoke rows are smoke/-prefixed (disjoint names), so a smoke run
+    # must also merge -- never clobber committed full-size rows.
+    if (args.only or args.smoke) and out.exists():
         kept = [
             r for r in json.loads(out.read_text())
             if r["name"] not in {x["name"] for x in all_rows}

@@ -1,0 +1,127 @@
+"""Forecast + receding-horizon walkthrough: how much does seeing the
+future (imperfectly) cut emissions?
+
+    PYTHONPATH=src python examples/forecast_lookahead.py
+
+Three acts:
+  1. Forecast quality -- roll every forecaster over a diurnal trace and
+     score MAE on leads 1..H-1 (persistence is the bar to clear).
+  2. Lookahead vs myopic -- LookaheadDPPPolicy on the diurnal-slack
+     fleet scenario with perfect, noisy, and learned forecasts; H=1
+     reproduces the myopic policy exactly.
+  3. The sandwich -- the clairvoyant-horizon oracle lower-bounds what
+     ANY H-slot planner could emit for the same energy profile, so you
+     can see how much of the available lookahead value the policy
+     captures.
+"""
+import jax
+import numpy as np
+
+from repro.configs.fleet_scenarios import build_fleet
+from repro.configs.paper_workloads import paper_spec
+from repro.core import (
+    CarbonIntensityPolicy,
+    LookaheadDPPPolicy,
+    TableCarbonSource,
+    UniformArrivals,
+    diurnal_table,
+    oracle_emissions_horizon,
+    simulate,
+    simulate_fleet,
+)
+from repro.forecast import (
+    ClairvoyantTableForecaster,
+    EWMAForecaster,
+    ForecastErrorModel,
+    PersistenceForecaster,
+    RidgeARForecaster,
+    SeasonalNaiveForecaster,
+    forecast_errors,
+)
+
+H, T, V = 8, 192, 0.2
+
+
+def act1_forecast_quality(tab):
+    print("== 1. forecast quality on a diurnal trace "
+          f"(MAE over leads 1..{H - 1}, lower is better) ==")
+    for name, fc in [
+        ("persistence", PersistenceForecaster(H=H)),
+        ("seasonal-naive", SeasonalNaiveForecaster(H=H, period=48)),
+        ("ewma", EWMAForecaster(H=H)),
+        ("ridge-AR", RidgeARForecaster(H=H)),
+    ]:
+        err = forecast_errors(fc, tab, burn_in=64)
+        lead = np.asarray(err["mae_per_lead"])
+        print(f"  {name:<15} mae={float(err['mae']):7.1f}   "
+              f"lead1={lead[0]:6.1f}  lead{H - 1}={lead[-1]:6.1f}")
+
+
+def act2_lookahead_vs_myopic():
+    print("\n== 2. lookahead vs myopic on the diurnal-slack fleet "
+          f"(F=16, T={T}, V={V}) ==")
+    fleet = build_fleet(["diurnal-slack"], per_kind=16, Tc=96, seed=0)
+    key = jax.random.PRNGKey(0)
+
+    def run(policy, forecaster=None):
+        res = jax.jit(lambda: simulate_fleet(
+            policy, fleet, T, key, forecaster=forecaster
+        ))()
+        em = np.asarray(res.cum_emissions[:, -1])
+        bl = np.asarray(res.Qe[:, -1].sum(-1) + res.Qc[:, -1].sum((-2, -1)))
+        return em, bl
+
+    em0, bl0 = run(CarbonIntensityPolicy(V=V, fast=True))
+    perfect = dict(discount=1.0, defer_weight=3.0)
+    realistic = dict(discount=0.98, defer_weight=2.0)
+    for name, pol, fc in [
+        ("myopic (baseline)", None, None),
+        ("lookahead H=1 (== myopic)",
+         LookaheadDPPPolicy(V=V, fast=True, H=1, **perfect),
+         ClairvoyantTableForecaster(H=1)),
+        ("lookahead H=8, perfect",
+         LookaheadDPPPolicy(V=V, fast=True, H=8, **perfect),
+         ClairvoyantTableForecaster(H=8)),
+        ("lookahead H=8, 20% noise",
+         LookaheadDPPPolicy(V=V, fast=True, H=8, **realistic),
+         ClairvoyantTableForecaster(
+             H=8, error=ForecastErrorModel(noise=0.2, seed=7))),
+        ("lookahead H=8, seasonal-naive",
+         LookaheadDPPPolicy(V=V, fast=True, H=8, **realistic),
+         SeasonalNaiveForecaster(H=8, period=48)),
+    ]:
+        em, bl = (em0, bl0) if pol is None else run(pol, fc)
+        red = 100.0 * (1.0 - em / em0).mean()
+        print(f"  {name:<30} reduction={red:6.1f}%   "
+              f"backlog x{(bl / bl0).mean():.2f}")
+
+
+def act3_oracle_sandwich(tab):
+    print("\n== 3. clairvoyant-horizon oracle sandwich (single network) ==")
+    spec = paper_spec()
+    src = TableCarbonSource(table=tab)
+    arrive = UniformArrivals(M=5, amax=240)
+    key = jax.random.PRNGKey(1)
+    la = LookaheadDPPPolicy(V=V, fast=True, H=H, discount=1.0,
+                            defer_weight=3.0)
+    res = simulate(la, spec, src, arrive, T, key,
+                   forecaster=ClairvoyantTableForecaster(H=H))
+    actual = float(res.cum_emissions[-1])
+    ee = np.asarray(res.energy_edge)
+    ec = np.asarray(res.energy_cloud)
+    for horizon, label in [(1, "H=1 (no deferral)"), (H, f"H={H}"),
+                           (None, "full trace")]:
+        lb = oracle_emissions_horizon(tab, ee, ec, horizon=horizon)
+        print(f"  oracle {label:<18} lower bound = {lb:.3e}"
+              f"   (policy emitted {actual / lb:.2f}x that)")
+
+
+def main() -> None:
+    tab = diurnal_table(T, 5, np.random.default_rng(0))
+    act1_forecast_quality(tab)
+    act2_lookahead_vs_myopic()
+    act3_oracle_sandwich(tab)
+
+
+if __name__ == "__main__":
+    main()

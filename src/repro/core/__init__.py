@@ -14,6 +14,7 @@ from repro.core.queueing import (
 from repro.core.policies import (
     CarbonIntensityPolicy,
     ExactDPPPolicy,
+    LookaheadDPPPolicy,
     QueueLengthPolicy,
     RandomPolicy,
 )
@@ -50,6 +51,7 @@ __all__ = [
     "step",
     "CarbonIntensityPolicy",
     "ExactDPPPolicy",
+    "LookaheadDPPPolicy",
     "QueueLengthPolicy",
     "RandomPolicy",
     "ConstantCarbonSource",
@@ -74,10 +76,12 @@ from repro.core.extensions import (  # noqa: E402
     AdaptiveVController,
     ThresholdPolicy,
     oracle_emissions_for_work,
+    oracle_emissions_horizon,
 )
 
 __all__ += [
     "AdaptiveVController",
     "ThresholdPolicy",
     "oracle_emissions_for_work",
+    "oracle_emissions_horizon",
 ]

@@ -140,16 +140,35 @@ def from_eso_csv(path: str, n_regions: int) -> TableCarbonSource:
     Expected columns: datetime, then one intensity column per region
     (gCO2/kWh). The first region backs the edge, the next `n_regions`
     back the clouds.
+
+    Rows with too few columns or non-numeric intensities are skipped;
+    if NO usable row remains (e.g. header-only export, or a file with
+    fewer regions than requested) a ValueError spells out what was
+    seen instead of failing later in TableCarbonSource.
     """
     rows = []
+    skipped = 0
+    expected_cols = n_regions + 2  # datetime + edge + n_regions clouds
     with open(path) as f:
         header = f.readline()
         del header
         for line in f:
-            parts = line.strip().split(",")
-            if len(parts) < n_regions + 2:
+            if not line.strip():
                 continue
-            rows.append([float(x) for x in parts[1 : n_regions + 2]])
+            parts = line.strip().split(",")
+            if len(parts) < expected_cols:
+                skipped += 1
+                continue
+            try:
+                rows.append([float(x) for x in parts[1:expected_cols]])
+            except ValueError:
+                skipped += 1
+    if not rows:
+        raise ValueError(
+            f"{path}: no usable data rows (expected >= {expected_cols} "
+            f"comma-separated columns: datetime, edge, {n_regions} "
+            f"cloud regions; skipped {skipped} malformed row(s))"
+        )
     table = np.asarray(rows, np.float32)
     return TableCarbonSource(table=table)
 

@@ -86,6 +86,50 @@ def oracle_emissions_for_work(
     return float(total)
 
 
+def oracle_emissions_horizon(
+    carbon_table: np.ndarray,          # [T, N+1] (edge, clouds)
+    edge_energy: np.ndarray,           # [T] edge kWh actually spent per slot
+    cloud_energy: np.ndarray,          # [T, N] cloud kWh spent per slot
+    horizon: int | None = None,
+) -> float:
+    """Clairvoyant-horizon lower bound on the emissions of the SAME
+    per-slot energy profile (companion to `oracle_emissions_for_work`,
+    which bounds against *totals* under budget caps).
+
+    Every kWh the policy spent in slot s is re-priced at the cheapest
+    intensity available within its deferral window [s, s+horizon)
+    (same region; rows wrap modulo T like the playback tables), with
+    budget contention ignored. Dropping the capacity constraint only
+    cheapens the relaxation, so the result lower-bounds any feasible
+    schedule that defers each unit of work at most `horizon-1` slots --
+    exactly the move set of an H-slot receding-horizon policy. With
+    horizon=None (or >= T) the window spans the whole trace: the
+    un-budgeted full-trace bound.
+
+    Emissions of LookaheadDPPPolicy(H) on its own energy profile are
+    therefore sandwiched: >= this bound at `horizon=H`, and the gap to
+    `horizon=None` is the value still on the table from longer
+    lookahead.
+    """
+    ci = np.asarray(carbon_table, np.float64)
+    T = ci.shape[0]
+    H = T if horizon is None else int(min(max(horizon, 1), T))
+    edge_e = np.asarray(edge_energy, np.float64).reshape(T)
+    cloud_e = np.asarray(cloud_energy, np.float64).reshape(T, -1)
+    if cloud_e.shape[1] != ci.shape[1] - 1:
+        raise ValueError(
+            f"cloud_energy has {cloud_e.shape[1]} columns, carbon_table "
+            f"provides {ci.shape[1] - 1} cloud regions"
+        )
+    # windowed min over [s, s+H) per column, wrapping like the tables
+    wmin = ci.copy()
+    for h in range(1, H):
+        np.minimum(wmin, np.roll(ci, -h, axis=0), out=wmin)
+    total = float(np.sum(edge_e * wmin[:, 0]))
+    total += float(np.sum(cloud_e * wmin[:, 1:]))
+    return total
+
+
 @dataclasses.dataclass
 class AdaptiveVController:
     """Multiplicative V feedback: hold total backlog near `target_backlog`.

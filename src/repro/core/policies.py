@@ -271,6 +271,71 @@ class CarbonIntensityPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class LookaheadDPPPolicy(CarbonIntensityPolicy):
+    """Receding-horizon drift-plus-penalty (beyond-paper, forecast
+    subsystem). Plans against an [H, N+1] intensity forecast and
+    executes only the first slot: the myopic scores are recomputed with
+    *deferral-penalized* intensities
+
+        C_eff = C_now + defer_weight * max(0, C_now - Cmin)
+        Cmin  = min_h forecast[h] / discount**h         (h = 0..H-1)
+
+    so a trough h slots ahead must beat the present by 1/discount**h
+    before it raises the bar for acting now -- the discounting absorbs
+    forecast-error growth and the queue-holding cost of waiting. Row 0
+    of the forecast is overwritten with the observed (Ce, Cc), hence
+    H=1 gives Cmin = C_now, zero penalty, and *bit-identical* actions
+    to CarbonIntensityPolicy on either score backend (the modified
+    intensities feed the identical score/fill pipeline). See DESIGN.md
+    §Receding-horizon lookahead.
+
+    With no forecast supplied (forecast=None) the policy degrades to
+    the myopic parent -- simulate() only threads forecasts when a
+    forecaster is given.
+    """
+
+    H: int = 8
+    discount: float = 0.98
+    defer_weight: float = 2.0
+
+    def effective_intensities(
+        self, Ce: Array, Cc: Array, forecast: Array | None
+    ) -> Tuple[Array, Array]:
+        if forecast is None or self.H <= 0:
+            return Ce, Cc
+        if forecast.shape[0] < self.H:
+            raise ValueError(
+                f"forecast covers {forecast.shape[0]} slots but the policy "
+                f"plans over H={self.H}: configure the forecaster with "
+                f"H >= {self.H} (silently planning short would mislabel "
+                "every lookahead result)"
+            )
+        f = forecast[: self.H].astype(jnp.float32)
+        f = f.at[0].set(jnp.concatenate([Ce[None], Cc]))
+        g = jnp.asarray(self.discount, jnp.float32) ** jnp.arange(
+            f.shape[0], dtype=jnp.float32
+        )
+        cmin = jnp.min(f / g[:, None], axis=0)  # [N+1]
+        w = jnp.asarray(self.defer_weight, jnp.float32)
+        Ce_eff = Ce + w * jnp.maximum(0.0, Ce - cmin[0])
+        Cc_eff = Cc + w * jnp.maximum(0.0, Cc - cmin[1:])
+        return Ce_eff, Cc_eff
+
+    def __call__(
+        self,
+        state: NetworkState,
+        spec: NetworkSpec,
+        Ce: Array,
+        Cc: Array,
+        arrivals: Array,
+        key: Array | None = None,
+        forecast: Array | None = None,
+    ) -> Action:
+        Ce_eff, Cc_eff = self.effective_intensities(Ce, Cc, forecast)
+        return super().__call__(state, spec, Ce_eff, Cc_eff, arrivals, key)
+
+
+@dataclasses.dataclass(frozen=True)
 class QueueLengthPolicy:
     """Paper §V baseline: queue-length based, carbon-blind.
 

@@ -14,6 +14,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.carbon import TableCarbonSource
 from repro.core.queueing import (
     Action,
     NetworkSpec,
@@ -87,19 +88,49 @@ def simulate(
     T: int,
     key: Array,
     state0: NetworkState | None = None,
+    forecaster: Callable | None = None,
 ) -> SimResult:
-    """Runs the network for T slots under `policy`."""
+    """Runs the network for T slots under `policy`.
+
+    When `forecaster` is given (see repro.forecast), its carry threads
+    through the scan next to the queue state: every slot the observed
+    intensity row updates the forecaster, its [H, N+1] prediction is
+    handed to the policy as `forecast=`, and emissions are still
+    accounted against the TRUE intensities -- forecast error can only
+    mislead the policy, never the ledger. The forecaster sees the
+    carbon key (so clairvoyant wrappers predict the realized world) and
+    the playback table when the source carries one
+    (`carbon_source.table`, e.g. TableCarbonSource / fleet lanes).
+    Policies consuming forecasts must accept a `forecast` kwarg
+    (LookaheadDPPPolicy does).
+    """
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
         state0 = init_state(spec.M, spec.N)
     k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
 
-    def body(state, t):
+    if forecaster is not None:
+        fcarry0 = forecaster.init(
+            spec.N,
+            key=k_carbon,
+            table=getattr(carbon_source, "table", None),
+        )
+
+    def body(carry, t):
+        state, fcarry = carry
         Ce, Cc = carbon_source(t, k_carbon)
         a = arrival_source(t, k_arrive)
-        act: Action = policy(
-            state, spec, Ce, Cc, a, jax.random.fold_in(k_policy, t)
-        )
+        k_t = jax.random.fold_in(k_policy, t)
+        if forecaster is None:
+            act: Action = policy(state, spec, Ce, Cc, a, k_t)
+        else:
+            fcarry = forecaster.update(
+                fcarry, jnp.concatenate([Ce[None], Cc])
+            )
+            act = policy(
+                state, spec, Ce, Cc, a, k_t,
+                forecast=forecaster.predict(fcarry, t),
+            )
         C_t = emissions(spec, act, Ce, Cc)
         nxt = step(state, act, a)
         out = (
@@ -111,10 +142,11 @@ def simulate(
             jnp.sum(act.d * pe[:, None]),
             jnp.sum(act.w * pc, axis=0),
         )
-        return nxt, out
+        return (nxt, fcarry), out
 
-    _, (C, Qe, Qc, disp, proc, ee, ec) = jax.lax.scan(
-        body, state0, jnp.arange(T)
+    carry0 = (state0, fcarry0 if forecaster is not None else ())
+    (_, _), (C, Qe, Qc, disp, proc, ee, ec) = jax.lax.scan(
+        body, carry0, jnp.arange(T)
     )
     return SimResult(
         emissions=C,
@@ -209,6 +241,7 @@ def simulate_fleet(
     fleet: FleetScenario,
     T: int,
     key: Array,
+    forecaster: Callable | None = None,
 ) -> SimResult:
     """Runs F independent network instances for T slots in ONE compiled
     call: the full `simulate` scan is vmapped over the stacked
@@ -226,17 +259,19 @@ def simulate_fleet(
 
     def one(pe, pc, Pe, Pc, ctab, amax, k):
         spec = NetworkSpec(pe=pe, pc=pc, Pe=Pe, Pc=Pc)
-
-        def carbon_source(t, kk):
-            del kk
-            row = ctab[t % ctab.shape[0]]
-            return row[0], row[1:]
+        # TableCarbonSource traces fine with a batched ctab; its .table
+        # attribute is also how simulate() hands each lane's slab to
+        # table-backed forecasters.
+        carbon_source = TableCarbonSource(table=ctab)
 
         def arrival_source(t, kk):
             u = jax.random.uniform(jax.random.fold_in(kk, t), (M,))
             return jnp.floor(u * (amax + 1.0))
 
-        return simulate(policy, spec, carbon_source, arrival_source, T, k)
+        return simulate(
+            policy, spec, carbon_source, arrival_source, T, k,
+            forecaster=forecaster,
+        )
 
     return jax.vmap(one)(
         fleet.spec.pe, fleet.spec.pc, fleet.spec.Pe, fleet.spec.Pc,

@@ -1,0 +1,33 @@
+"""Carbon-intensity forecasting + forecast-quality stress axis.
+
+Forecasters produce an [H, N+1] intensity forecast each slot (row 0 =
+the observed present); ``LookaheadDPPPolicy`` consumes them through
+``simulate(..., forecaster=...)``. See forecasters.py for the shared
+contract and DESIGN.md §Receding-horizon lookahead for the policy math.
+"""
+from repro.forecast.forecasters import (
+    EWMAForecaster,
+    Forecaster,
+    PersistenceForecaster,
+    RidgeARForecaster,
+    SeasonalNaiveForecaster,
+)
+from repro.forecast.metrics import forecast_errors, rolling_forecasts
+from repro.forecast.source import (
+    ClairvoyantTableForecaster,
+    ForecastErrorModel,
+    ForecastedCarbonSource,
+)
+
+__all__ = [
+    "Forecaster",
+    "PersistenceForecaster",
+    "SeasonalNaiveForecaster",
+    "EWMAForecaster",
+    "RidgeARForecaster",
+    "ForecastErrorModel",
+    "ForecastedCarbonSource",
+    "ClairvoyantTableForecaster",
+    "forecast_errors",
+    "rolling_forecasts",
+]

@@ -1,0 +1,205 @@
+"""Pure-JAX carbon-intensity forecasters (beyond-paper subsystem).
+
+A *forecaster* turns the stream of observed intensity rows into an
+``[H, N+1]`` forecast each slot (column 0 = edge region, columns
+1..N = clouds, matching the playback-table layout in
+``core/carbon.py``). The contract shared by every implementation:
+
+    H : int                                  -- horizon (slots)
+    init(N, *, key=None, table=None) -> carry     (pytree of arrays)
+    update(carry, row [N+1]) -> carry        -- observe slot t's row
+    predict(carry, t) -> [H, N+1] float32    -- row 0 = slot t (the
+        last *observed* row), rows h>=1 = predictions for t+h
+
+``update`` runs before ``predict`` each slot, so row 0 of every
+forecast is the intensity the policy already observes -- that is what
+makes ``LookaheadDPPPolicy(H=1)`` collapse exactly onto the myopic
+policy. All state lives in the carry pytree and every method is pure
+jnp, so forecasters thread through ``lax.scan`` and vmap across fleet
+instances unchanged.
+
+Implementations (increasing sophistication):
+
+  * PersistenceForecaster   -- tomorrow == today. The baseline every
+    forecasting paper must beat.
+  * SeasonalNaiveForecaster -- value one period ago (period in slots;
+    default 48 = one day of 30-min slots, matching ``diurnal_table``).
+  * EWMAForecaster          -- exponentially-weighted level, flat ahead.
+  * RidgeARForecaster       -- per-region linear AR(p) with intercept,
+    ridge-regularized least squares refit on a sliding window every
+    slot, rolled forward H steps with ``lax.scan``.
+
+Clairvoyant (table/source-backed) forecasters live in
+``forecast/source.py``; accuracy metrics in ``forecast/metrics.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@runtime_checkable
+class Forecaster(Protocol):
+    """Structural type for everything `simulate(..., forecaster=)` accepts."""
+
+    H: int
+
+    def init(self, N: int, *, key=None, table=None) -> Any:
+        ...
+
+    def update(self, carry: Any, row: Array) -> Any:
+        ...
+
+    def predict(self, carry: Any, t: Array) -> Array:
+        ...
+
+
+def _tile_last(row: Array, H: int) -> Array:
+    """[N+1] -> [H, N+1] persistence forecast."""
+    return jnp.broadcast_to(row, (H,) + row.shape).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PersistenceForecaster:
+    """forecast(t+h) = observation(t) for every h."""
+
+    H: int = 8
+
+    def init(self, N: int, *, key=None, table=None):
+        del key, table
+        return jnp.zeros((N + 1,), jnp.float32)
+
+    def update(self, carry, row):
+        del carry
+        return row.astype(jnp.float32)
+
+    def predict(self, carry, t):
+        del t
+        return _tile_last(carry, self.H)
+
+
+@dataclasses.dataclass(frozen=True)
+class SeasonalNaiveForecaster:
+    """forecast(t+h) = observation(t+h-period): the previous day's value
+    at the same slot-of-day. Falls back to persistence until a full
+    period has been observed. `period` defaults to the 48 half-hour
+    slots/day used by ``diurnal_table`` / the ESO traces."""
+
+    H: int = 8
+    period: int = 48
+
+    def init(self, N: int, *, key=None, table=None):
+        del key, table
+        buf = jnp.zeros((self.period, N + 1), jnp.float32)
+        return buf, jnp.int32(0)
+
+    def update(self, carry, row):
+        buf, count = carry
+        buf = jnp.roll(buf, -1, axis=0).at[-1].set(row.astype(jnp.float32))
+        return buf, count + 1
+
+    def predict(self, carry, t):
+        del t
+        buf, count = carry
+        # After k>=period updates buf[-1] = obs(t), buf[0] = obs(t-period+1),
+        # so obs(t+h-period) sits at index h-1 (h in 1..period).
+        h = jnp.arange(1, self.H)
+        seasonal = buf[(h - 1) % self.period]
+        fc = jnp.concatenate([buf[-1:], seasonal], axis=0)
+        ready = count >= self.period
+        return jnp.where(ready, fc, _tile_last(buf[-1], self.H))
+
+
+@dataclasses.dataclass(frozen=True)
+class EWMAForecaster:
+    """Exponentially-weighted moving-average level, forecast flat ahead.
+    Row 0 stays the raw last observation (the policy's known present)."""
+
+    H: int = 8
+    alpha: float = 0.3
+
+    def init(self, N: int, *, key=None, table=None):
+        del key, table
+        z = jnp.zeros((N + 1,), jnp.float32)
+        return z, z, jnp.int32(0)  # (level, last_row, count)
+
+    def update(self, carry, row):
+        level, _, count = carry
+        row = row.astype(jnp.float32)
+        level = jnp.where(
+            count == 0, row, self.alpha * row + (1.0 - self.alpha) * level
+        )
+        return level, row, count + 1
+
+    def predict(self, carry, t):
+        del t
+        level, last, _ = carry
+        ahead = jnp.broadcast_to(level, (self.H - 1,) + level.shape)
+        return jnp.concatenate([last[None], ahead], axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RidgeARForecaster:
+    """Per-region AR(p) with intercept, refit every slot by ridge least
+    squares on the last `window` observations, rolled forward H-1 steps.
+
+    The fit is the closed-form normal-equation solve
+    theta = (X'X + ridge*I)^-1 X'y per region (vmapped over regions);
+    the multi-step rollout is a ``lax.scan`` feeding each prediction
+    back into the lag window. Falls back to persistence until the
+    window is entirely real observations (`window` updates) -- fitting
+    earlier would regress on the fabricated zeros the buffer starts
+    with.
+    """
+
+    H: int = 8
+    lags: int = 8
+    window: int = 64
+    ridge: float = 1.0
+
+    def init(self, N: int, *, key=None, table=None):
+        del key, table
+        assert self.window >= 2 * self.lags, "window too short to fit AR"
+        buf = jnp.zeros((self.window, N + 1), jnp.float32)
+        return buf, jnp.int32(0)
+
+    def update(self, carry, row):
+        buf, count = carry
+        buf = jnp.roll(buf, -1, axis=0).at[-1].set(row.astype(jnp.float32))
+        return buf, count + 1
+
+    def _fit_column(self, col: Array) -> Array:
+        """col [window] -> theta [lags+1] (AR coefficients + intercept)."""
+        p, L = self.lags, self.window
+        idx = jnp.arange(L - p)[:, None] + jnp.arange(p)[None, :]
+        X = col[idx]                                   # [L-p, p]
+        X = jnp.concatenate([X, jnp.ones((L - p, 1), col.dtype)], axis=1)
+        y = col[p:]
+        XtX = X.T @ X + self.ridge * jnp.eye(p + 1, dtype=col.dtype)
+        return jnp.linalg.solve(XtX, X.T @ y)
+
+    def predict(self, carry, t):
+        del t
+        buf, count = carry
+        theta = jax.vmap(self._fit_column, in_axes=1, out_axes=1)(buf)
+        # theta [lags+1, N+1]; rollout feeds predictions back in.
+        lagwin = buf[-self.lags:]                      # [p, N+1]
+
+        def roll(win, _):
+            nxt = jnp.sum(win * theta[: self.lags], axis=0) + theta[-1]
+            nxt = jnp.maximum(nxt, 0.0)  # intensities are nonnegative
+            win = jnp.roll(win, -1, axis=0).at[-1].set(nxt)
+            return win, nxt
+
+        _, ahead = jax.lax.scan(roll, lagwin, None, length=self.H - 1)
+        fc = jnp.concatenate([buf[-1:], ahead], axis=0)
+        # Not ready until the whole window holds real observations: a
+        # partially-filled buffer would fit theta on the fabricated
+        # zeros from init (and their zero->real jump).
+        ready = count >= self.window
+        return jnp.where(ready, fc, _tile_last(buf[-1], self.H))

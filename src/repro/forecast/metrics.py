@@ -1,0 +1,69 @@
+"""Offline forecast evaluation: roll a forecaster over a trace table.
+
+One ``lax.scan`` replays the table as if it were arriving live
+(update then predict, exactly like the simulator wiring) and scores
+every forecast against the realized future. Pure jnp, so the whole
+evaluation jits and vmaps over a stack of tables -- the forecast-
+quality regression tests and the example both lean on that.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rolling_forecasts(forecaster, table: Array, *, key=None) -> Array:
+    """Replays `table` [T, N+1] through `forecaster`; returns the
+    forecast tensor [T, H, N+1] (entry [t] is issued after observing
+    row t)."""
+    table = jnp.asarray(table, jnp.float32)
+    N = table.shape[1] - 1
+    carry0 = forecaster.init(N, key=key, table=table)
+
+    def body(carry, xs):
+        t, row = xs
+        carry = forecaster.update(carry, row)
+        return carry, forecaster.predict(carry, t)
+
+    T = table.shape[0]
+    _, fc = jax.lax.scan(
+        body, carry0, (jnp.arange(T), table)
+    )
+    return fc
+
+
+def forecast_errors(
+    forecaster,
+    table: Array,
+    *,
+    key=None,
+    burn_in: int = 0,
+) -> dict:
+    """MAE / RMSE of `forecaster` on `table`, scored on leads h >= 1
+    only (lead 0 is the observed present by contract, hence exact).
+
+    Forecasts whose target slot falls off the end of the table are
+    excluded; `burn_in` additionally drops the first slots where
+    history-based forecasters are still warming up. Returns scalars
+    plus the per-lead MAE profile [H-1].
+    """
+    table = jnp.asarray(table, jnp.float32)
+    T = table.shape[0]
+    H = forecaster.H
+    fc = rolling_forecasts(forecaster, table, key=key)  # [T, H, N+1]
+
+    h = jnp.arange(1, H)
+    # realized value for forecast issued at t, lead h: table[t+h]
+    tgt_idx = jnp.arange(T)[:, None] + h[None, :]       # [T, H-1]
+    valid = (tgt_idx < T) & (jnp.arange(T)[:, None] >= burn_in)
+    truth = table[jnp.clip(tgt_idx, 0, T - 1)]          # [T, H-1, N+1]
+    err = fc[:, 1:, :] - truth
+    w = jnp.broadcast_to(valid[..., None], err.shape).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    mae = jnp.sum(jnp.abs(err) * w) / denom
+    rmse = jnp.sqrt(jnp.sum(err**2 * w) / denom)
+    per_lead_denom = jnp.maximum(jnp.sum(w, axis=(0, 2)), 1.0)
+    mae_per_lead = jnp.sum(jnp.abs(err) * w, axis=(0, 2)) / per_lead_denom
+    return {"mae": mae, "rmse": rmse, "mae_per_lead": mae_per_lead}

@@ -1,0 +1,146 @@
+"""Clairvoyant forecast providers + the forecast-error model.
+
+Real grid operators publish *forecasts*, not the future; the gap
+between the two is exactly the axis a lookahead scheduler must be
+stress-tested on. This module provides the two clairvoyant endpoints
+of that axis and a configurable corruption in between:
+
+  * ForecastErrorModel     -- multiplicative bias + heteroscedastic
+    noise whose std grows with lead time and with the intensity level
+    (large excursions are the hard-to-predict ones). Lead 0 is always
+    exact: the current slot is observed, not forecast.
+  * ForecastedCarbonSource -- wraps ANY existing carbon source
+    (Random/UKRegional/Table/Constant...) and doubles as a Forecaster:
+    it serves the true (Ce, Cc) through ``__call__`` and the
+    error-corrupted future through ``predict``. Works because every
+    source in core/carbon.py is a pure function of (t, key).
+  * ClairvoyantTableForecaster -- forecasts straight off a playback
+    table; this is the fleet-path twin (``simulate_fleet`` hands each
+    lane its own [Tc, N+1] table via ``init(table=...)``).
+
+Both forecasters honor the shared contract in forecasters.py (init /
+update / predict, row 0 = current slot).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ForecastErrorModel:
+    """forecast[h] = truth[h] * (1 + bias) + noise * truth[h] * sqrt(h) * eps.
+
+    bias  -- systematic multiplicative error (e.g. +0.1 = 10% over-
+             prediction at every lead).
+    noise -- heteroscedastic noise fraction: per-lead std is
+             ``noise * truth * sqrt(h)``, so error grows with both the
+             lead time and the intensity level.
+    seed  -- error-realization stream, independent of the world's RNG.
+
+    Lead 0 is returned exactly and the result is clipped at 0 (negative
+    intensity forecasts are unphysical). bias=noise=0 is the perfect
+    (clairvoyant) forecast.
+    """
+
+    bias: float = 0.0
+    noise: float = 0.0
+    seed: int = 0
+
+    @property
+    def exact(self) -> bool:
+        return self.bias == 0.0 and self.noise == 0.0
+
+    def apply(self, truth: Array, t: Array, key: Array | None = None) -> Array:
+        """truth [H, N+1] -> corrupted forecast [H, N+1]. `key` decorrelates
+        realizations across vmapped fleet lanes (each lane folds in its
+        own stream); without it every lane would draw identical errors."""
+        if self.exact:
+            return truth.astype(jnp.float32)
+        truth = truth.astype(jnp.float32)
+        h = jnp.sqrt(jnp.arange(truth.shape[0], dtype=jnp.float32))
+        if key is None:
+            key = jax.random.PRNGKey(self.seed)
+        else:
+            key = jax.random.fold_in(key, self.seed)
+        eps = jax.random.normal(jax.random.fold_in(key, t), truth.shape)
+        pred = truth * (1.0 + self.bias) + self.noise * truth * h[:, None] * eps
+        pred = pred.at[0].set(truth[0])
+        return jnp.maximum(pred, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ForecastedCarbonSource:
+    """A carbon source that also serves its own (possibly corrupted)
+    forecast. Use it both ways in one ``simulate`` call:
+
+        src = ForecastedCarbonSource(UKRegionalTraceSource(N=5), H=16,
+                                     error=ForecastErrorModel(noise=0.1))
+        simulate(policy, spec, src, arrivals, T, key, forecaster=src)
+
+    The simulator passes its carbon key into ``init`` so ``predict``
+    evaluates the base source on the *same* realized world it will later
+    serve through ``__call__``.
+    """
+
+    base: Callable
+    H: int = 8
+    error: ForecastErrorModel = ForecastErrorModel()
+
+    def __call__(self, t: Array, key: Array) -> Tuple[Array, Array]:
+        return self.base(t, key)
+
+    def init(self, N: int, *, key=None, table=None):
+        del N, table
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return key
+
+    def update(self, carry, row):
+        del row
+        return carry
+
+    def predict(self, carry, t):
+        def row_at(tt):
+            Ce, Cc = self.base(tt, carry)
+            return jnp.concatenate([Ce[None], Cc]).astype(jnp.float32)
+
+        truth = jax.vmap(row_at)(t + jnp.arange(self.H))
+        return self.error.apply(truth, t, key=carry)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClairvoyantTableForecaster:
+    """Reads the future straight off a playback table (rows repeat
+    modulo the table length, matching TableCarbonSource / the fleet
+    engine). The table arrives through ``init(table=...)``: in
+    ``simulate_fleet`` each vmap lane hands in its own [Tc, N+1] slab,
+    so one forecaster instance serves the whole fleet."""
+
+    H: int = 8
+    error: ForecastErrorModel = ForecastErrorModel()
+
+    def init(self, N: int, *, key=None, table=None):
+        if table is None:
+            raise ValueError(
+                "ClairvoyantTableForecaster needs a playback table: pass a "
+                "table-backed carbon source (TableCarbonSource / fleet "
+                "lane) or use ForecastedCarbonSource for functional sources"
+            )
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return jnp.asarray(table, jnp.float32), key
+
+    def update(self, carry, row):
+        del row
+        return carry
+
+    def predict(self, carry, t):
+        table, key = carry
+        idx = (t + jnp.arange(self.H)) % table.shape[0]
+        return self.error.apply(table[idx], t, key=key)

@@ -69,6 +69,40 @@ def test_eso_csv_loader(tmp_path):
     np.testing.assert_array_equal(np.asarray(Cc), [60.0, 280.0])
 
 
+def test_eso_csv_header_only_raises(tmp_path):
+    p = tmp_path / "empty.csv"
+    p.write_text("datetime,edge,r1,r2\n")
+    with pytest.raises(ValueError, match="no usable data rows"):
+        from_eso_csv(str(p), n_regions=2)
+
+
+def test_eso_csv_all_rows_malformed_raises_with_counts(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text(
+        "datetime,edge,r1,r2\n"
+        "2022-01-01T00:00,100\n"          # too few columns
+        "2022-01-01T00:30,oops,60,280\n"  # non-numeric intensity
+    )
+    with pytest.raises(ValueError) as ei:
+        from_eso_csv(str(p), n_regions=2)
+    msg = str(ei.value)
+    assert "skipped 2 malformed row(s)" in msg
+    assert ">= 4" in msg  # expected column count spelled out
+
+
+def test_eso_csv_skips_malformed_keeps_good(tmp_path):
+    p = tmp_path / "mixed.csv"
+    p.write_text(
+        "datetime,edge,r1,r2\n"
+        "2022-01-01T00:00,100,50,300\n"
+        "short,row\n"
+        "\n"
+        "2022-01-01T00:30,120,60,280\n"
+    )
+    src = from_eso_csv(str(p), n_regions=2)
+    assert src.table.shape == (2, 3)
+
+
 def test_constant_source():
     src = ConstantCarbonSource(N=3, Ce=5.0, Cc=7.0)
     Ce, Cc = src(jnp.asarray(0), None)

@@ -1,0 +1,331 @@
+"""Forecast subsystem tests: forecaster contracts (shape/dtype, vmap),
+LookaheadDPPPolicy H=1 bit-parity on both score backends, forecast-
+quality regressions, the error model, and the clairvoyant-horizon
+oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_workloads import paper_spec
+from repro.core import (
+    CarbonIntensityPolicy,
+    LookaheadDPPPolicy,
+    TableCarbonSource,
+    UniformArrivals,
+    diurnal_table,
+    oracle_emissions_horizon,
+    simulate,
+    simulate_fleet,
+)
+from repro.core.queueing import NetworkSpec, NetworkState
+from repro.forecast import (
+    ClairvoyantTableForecaster,
+    EWMAForecaster,
+    ForecastErrorModel,
+    ForecastedCarbonSource,
+    PersistenceForecaster,
+    RidgeARForecaster,
+    SeasonalNaiveForecaster,
+    forecast_errors,
+    rolling_forecasts,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+ALL_FORECASTERS = [
+    PersistenceForecaster,
+    SeasonalNaiveForecaster,
+    EWMAForecaster,
+    RidgeARForecaster,
+]
+
+
+# ---------------------------------------------------------------- contracts
+
+
+@pytest.mark.parametrize("cls", ALL_FORECASTERS)
+@pytest.mark.parametrize("H", [1, 4, 8])
+def test_forecaster_shape_dtype(cls, H):
+    fc = cls(H=H)
+    tab = diurnal_table(40, 3, np.random.default_rng(0))
+    out = rolling_forecasts(fc, tab)
+    assert out.shape == (40, H, 4)
+    assert out.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("cls", ALL_FORECASTERS)
+def test_forecaster_vmaps_over_tables(cls):
+    """The whole rolling evaluation vmaps over a stack of tables --
+    the property the fleet engine relies on."""
+    fc = cls(H=6)
+    rng = np.random.default_rng(1)
+    tabs = jnp.stack(
+        [jnp.asarray(diurnal_table(30, 4, rng)) for _ in range(5)]
+    )
+    out = jax.jit(jax.vmap(lambda t: rolling_forecasts(fc, t)))(tabs)
+    assert out.shape == (5, 30, 6, 5)
+    assert out.dtype == jnp.float32
+    # lanes see different tables -> different forecasts
+    assert not np.allclose(np.asarray(out[0]), np.asarray(out[1]))
+
+
+@pytest.mark.parametrize("cls", ALL_FORECASTERS)
+def test_row0_is_observed_present(cls):
+    """Contract: predict()[0] is the row just observed."""
+    fc = cls(H=5)
+    tab = diurnal_table(60, 3, np.random.default_rng(2))
+    out = np.asarray(rolling_forecasts(fc, tab))
+    np.testing.assert_allclose(out[:, 0, :], tab, rtol=1e-6)
+
+
+def test_clairvoyant_table_forecaster_exact_and_wrapping():
+    tab = diurnal_table(20, 2, np.random.default_rng(3))
+    fc = ClairvoyantTableForecaster(H=6)
+    carry = fc.init(2, table=tab)
+    pred = np.asarray(fc.predict(carry, jnp.int32(17)))
+    expect = tab[(17 + np.arange(6)) % 20]
+    np.testing.assert_allclose(pred, expect, rtol=1e-6)
+    with pytest.raises(ValueError, match="playback table"):
+        fc.init(2, table=None)
+
+
+def test_forecasted_carbon_source_serves_truth_and_forecast():
+    base = TableCarbonSource(table=diurnal_table(
+        30, 3, np.random.default_rng(4)
+    ))
+    src = ForecastedCarbonSource(base, H=4)
+    key = jax.random.PRNGKey(0)
+    Ce, Cc = src(jnp.int32(5), key)  # passthrough
+    Ce0, Cc0 = base(jnp.int32(5), key)
+    assert float(Ce) == float(Ce0)
+    np.testing.assert_array_equal(np.asarray(Cc), np.asarray(Cc0))
+    carry = src.init(3, key=key)
+    pred = np.asarray(src.predict(carry, jnp.int32(5)))
+    assert pred.shape == (4, 4)
+    np.testing.assert_allclose(pred[0], base.table[5], rtol=1e-6)
+    np.testing.assert_allclose(pred[2], base.table[7], rtol=1e-6)
+
+
+def test_forecast_errors_mae_is_per_entry():
+    """Regression: MAE must be normalized over ALL scored entries
+    (slots x leads x regions), not slots x leads -- an earlier version
+    inflated it by a factor of N+1."""
+    tab = np.zeros((10, 4), np.float32)
+    tab[5:] = 1.0  # single step; persistence is wrong exactly at t=4
+    e = forecast_errors(PersistenceForecaster(H=2), tab)
+    # 9 valid (slot, lead) pairs, one wrong, |err|=1 in all 4 regions:
+    # per-entry MAE = 4 / (9*4) = 1/9.
+    assert float(e["mae"]) == pytest.approx(1.0 / 9.0, rel=1e-5)
+
+
+def test_error_model_decorrelates_across_keys():
+    """Regression: under simulate_fleet's vmap every lane must draw its
+    own noise realization (the key threads through the carry)."""
+    em = ForecastErrorModel(noise=0.3, seed=7)
+    truth = jnp.full((4, 3), 200.0, jnp.float32)
+    a = np.asarray(em.apply(truth, jnp.int32(0), key=jax.random.PRNGKey(1)))
+    b = np.asarray(em.apply(truth, jnp.int32(0), key=jax.random.PRNGKey(2)))
+    assert not np.allclose(a[1:], b[1:])
+
+
+def test_lookahead_rejects_short_forecast():
+    rng = np.random.default_rng(6)
+    spec, state, Ce, Cc = _random_instance(rng, 5, 3)
+    short = jnp.zeros((4, 4), jnp.float32)
+    with pytest.raises(ValueError, match="H >= 8"):
+        LookaheadDPPPolicy(V=0.1, H=8)(
+            state, spec, Ce, Cc, None, None, forecast=short
+        )
+
+
+# ------------------------------------------------------------- error model
+
+
+def test_error_model_lead0_exact_noise_grows_with_lead():
+    em = ForecastErrorModel(noise=0.2, seed=1)
+    truth = jnp.full((8, 4), 300.0, jnp.float32)
+    devs = []
+    for t in range(50):
+        pred = np.asarray(em.apply(truth, jnp.int32(t)))
+        assert pred.min() >= 0.0
+        devs.append(np.abs(pred - np.asarray(truth)))
+    devs = np.stack(devs)  # [50, 8, 4]
+    np.testing.assert_array_equal(devs[:, 0, :], 0.0)  # present is known
+    mean_dev = devs.mean(axis=(0, 2))  # per-lead
+    assert mean_dev[1] > 0.0
+    assert mean_dev[-1] > 2.0 * mean_dev[1]  # heteroscedastic growth
+
+
+def test_error_model_bias():
+    em = ForecastErrorModel(bias=0.5)
+    truth = jnp.full((4, 3), 100.0, jnp.float32)
+    pred = np.asarray(em.apply(truth, jnp.int32(0)))
+    np.testing.assert_allclose(pred[0], 100.0)
+    np.testing.assert_allclose(pred[1:], 150.0)
+
+
+# ----------------------------------------------------- H=1 parity (tentpole)
+
+
+def _random_instance(rng, M, N):
+    spec = NetworkSpec(
+        pe=rng.uniform(1, 8, M).astype(np.float32),
+        pc=rng.uniform(2, 100, (M, N)).astype(np.float32),
+        Pe=float(rng.uniform(100, 2000)),
+        Pc=rng.uniform(100, 5000, N).astype(np.float32),
+    )
+    state = NetworkState(
+        Qe=jnp.asarray(rng.integers(0, 1000, M).astype(np.float32)),
+        Qc=jnp.asarray(rng.integers(0, 1000, (M, N)).astype(np.float32)),
+    )
+    Ce = jnp.float32(rng.uniform(0, 700))
+    Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+    return spec, state, Ce, Cc
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_h1_bit_parity_single_call(backend):
+    """LookaheadDPPPolicy(H=1) == CarbonIntensityPolicy bitwise, per
+    action, on randomized specs -- even with an adversarial forecast
+    (row 0 is overwritten with the observed intensities)."""
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        M, N = int(rng.integers(3, 20)), int(rng.integers(2, 10))
+        spec, state, Ce, Cc = _random_instance(rng, M, N)
+        forecast = jnp.asarray(
+            rng.uniform(0, 700, (1, N + 1)).astype(np.float32)
+        )
+        myo = CarbonIntensityPolicy(V=0.05, score_backend=backend)
+        la = LookaheadDPPPolicy(
+            V=0.05, H=1, defer_weight=5.0, score_backend=backend
+        )
+        a0 = jax.jit(lambda s: myo(s, spec, Ce, Cc, None, None))(state)
+        a1 = jax.jit(
+            lambda s: la(s, spec, Ce, Cc, None, None, forecast=forecast)
+        )(state)
+        np.testing.assert_array_equal(
+            np.asarray(a0.d), np.asarray(a1.d), err_msg=f"trial {trial}"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(a0.w), np.asarray(a1.w), err_msg=f"trial {trial}"
+        )
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_h1_bit_parity_full_simulation(backend):
+    """Parity holds over a whole simulate() run with the forecaster
+    threading through the scan carry."""
+    spec = paper_spec()
+    tab = diurnal_table(60, 5, np.random.default_rng(1))
+    src = TableCarbonSource(table=tab)
+    arrive = UniformArrivals(M=5, amax=300)
+    key = jax.random.PRNGKey(2)
+    r0 = simulate(
+        CarbonIntensityPolicy(V=0.05, score_backend=backend),
+        spec, src, arrive, 60, key,
+    )
+    r1 = simulate(
+        LookaheadDPPPolicy(V=0.05, H=1, score_backend=backend),
+        spec, src, arrive, 60, key,
+        forecaster=ClairvoyantTableForecaster(H=1),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r0.cum_emissions), np.asarray(r1.cum_emissions)
+    )
+    np.testing.assert_array_equal(np.asarray(r0.Qe), np.asarray(r1.Qe))
+    np.testing.assert_array_equal(np.asarray(r0.Qc), np.asarray(r1.Qc))
+
+
+def test_lookahead_without_forecast_degrades_to_myopic():
+    rng = np.random.default_rng(5)
+    spec, state, Ce, Cc = _random_instance(rng, 8, 4)
+    a0 = CarbonIntensityPolicy(V=0.1)(state, spec, Ce, Cc, None, None)
+    a1 = LookaheadDPPPolicy(V=0.1, H=8)(state, spec, Ce, Cc, None, None)
+    np.testing.assert_array_equal(np.asarray(a0.d), np.asarray(a1.d))
+    np.testing.assert_array_equal(np.asarray(a0.w), np.asarray(a1.w))
+
+
+# ----------------------------------------------- lookahead value + regression
+
+
+def test_lookahead_reduces_emissions_on_diurnal_fleet():
+    """Small in-test version of the acceptance bench: H=8 + perfect
+    forecasts beats the myopic policy on emissions on the diurnal
+    fleet scenario, without exploding the backlog."""
+    from repro.configs.fleet_scenarios import build_fleet
+
+    fleet = build_fleet(["diurnal"], per_kind=4, Tc=96, seed=0)
+    key = jax.random.PRNGKey(0)
+    T = 96
+
+    def run(policy, forecaster=None):
+        res = jax.jit(lambda: simulate_fleet(
+            policy, fleet, T, key, forecaster=forecaster
+        ))()
+        em = np.asarray(res.cum_emissions[:, -1])
+        bl = np.asarray(res.Qe[:, -1].sum(-1) + res.Qc[:, -1].sum((-2, -1)))
+        return em, bl
+
+    em0, bl0 = run(CarbonIntensityPolicy(V=0.2, fast=True))
+    em1, bl1 = run(
+        LookaheadDPPPolicy(V=0.2, fast=True, H=8, discount=1.0,
+                           defer_weight=3.0),
+        ClairvoyantTableForecaster(H=8),
+    )
+    assert em1.mean() < 0.95 * em0.mean()  # real reduction
+    assert bl1.mean() < 1.5 * bl0.mean()   # bounded deferral price
+
+
+def test_seasonal_naive_beats_persistence_on_diurnal():
+    """Regression: on diurnal traces the seasonal-naive forecaster must
+    dominate persistence (that gap is the whole reason the period-aware
+    forecaster exists)."""
+    rng = np.random.default_rng(7)
+    for trial in range(3):
+        tab = diurnal_table(48 * 4, 4, rng)
+        e_per = forecast_errors(PersistenceForecaster(H=8), tab, burn_in=48)
+        e_sea = forecast_errors(
+            SeasonalNaiveForecaster(H=8, period=48), tab, burn_in=48
+        )
+        assert float(e_sea["mae"]) < 0.8 * float(e_per["mae"]), (
+            f"trial {trial}: seasonal {float(e_sea['mae']):.1f} vs "
+            f"persistence {float(e_per['mae']):.1f}"
+        )
+
+
+def test_ridge_ar_beats_ewma_on_diurnal():
+    """The fitted AR model should beat the level-only EWMA on a signal
+    that is mostly structure."""
+    tab = diurnal_table(48 * 4, 4, np.random.default_rng(9))
+    e_ar = forecast_errors(RidgeARForecaster(H=8), tab, burn_in=64)
+    e_ew = forecast_errors(EWMAForecaster(H=8), tab, burn_in=64)
+    assert float(e_ar["mae"]) < float(e_ew["mae"])
+
+
+# ------------------------------------------------------------ horizon oracle
+
+
+def test_oracle_horizon_monotone_and_consistent():
+    tab = diurnal_table(96, 3, np.random.default_rng(11))
+    rng = np.random.default_rng(12)
+    ee = rng.uniform(0, 50, 96)
+    ec = rng.uniform(0, 80, (96, 3))
+    actual = float(np.sum(ee * tab[:, 0]) + np.sum(ec * tab[:, 1:]))
+    lb1 = oracle_emissions_horizon(tab, ee, ec, horizon=1)
+    lb8 = oracle_emissions_horizon(tab, ee, ec, horizon=8)
+    lb_full = oracle_emissions_horizon(tab, ee, ec, horizon=None)
+    # H=1 re-prices every kWh at its own slot: exactly the actual cost.
+    assert lb1 == pytest.approx(actual, rel=1e-6)
+    # longer windows only cheapen the relaxation
+    assert lb_full <= lb8 <= lb1
+    assert lb_full < 0.99 * lb1  # diurnal spread leaves real value
+
+
+def test_oracle_horizon_rejects_mismatched_columns():
+    tab = diurnal_table(10, 3, np.random.default_rng(0))
+    with pytest.raises(ValueError, match="columns"):
+        oracle_emissions_horizon(
+            tab, np.zeros(10), np.zeros((10, 2)), horizon=2
+        )
