@@ -214,8 +214,12 @@ def bench_score_backends() -> List[Row]:
         ))
         rows.append((f"score_reference/M{M}xN{N}", _timeit(f_ref, 10),
                      M * N))
+        # native fused kernel on TPU (interpret=None auto); off-TPU the
+        # auto-dispatch would lower to the reference and measure
+        # nothing, so force the emulated-kernel oracle there instead.
+        interp = None if jax.default_backend() == "tpu" else True
         f_pal = jax.jit(lambda: ops.carbon_scores(
-            Qc, pc, Qe, pe, Cc, jnp.float32(15.0)
+            Qc, pc, Qe, pe, Cc, jnp.float32(15.0), interpret=interp
         ))
         rows.append((f"score_pallas/M{M}xN{N}", _timeit(f_pal, 10), M * N))
     return rows
@@ -330,6 +334,89 @@ def bench_forecast_lookahead() -> List[Row]:
     return rows
 
 
+def bench_network_routing() -> List[Row]:
+    """WAN transfer subsystem (repro.network). Three row families:
+
+    * network/<topology>/... -- route-aware NetworkAwareDPPPolicy vs
+      the transfer-blind StaticRoutePolicy(CarbonIntensityPolicy)
+      baseline, 64+ lanes in one compiled call; derived = % cumulative-
+      emission reduction vs blind (the congested-uplink reduction is
+      the subsystem's acceptance gate). us_per_call is per lane-slot.
+    * network/aware_pallas rows -- the same fleet with the route-score
+      pass on the pallas backend (auto-dispatch: fused kernel on TPU,
+      bit-identical reference off-TPU), the "no slower at fleet scale"
+      contract row. NOTE: off-TPU both backends lower to identical
+      code, so any ref-vs-pallas gap in a CPU run is timing noise; the
+      row only becomes a real backend comparison on TPU.
+    * network/route_kernel rows -- bare kernel-vs-reference contract at
+      large single-call sizes; the interpret row is the CPU-emulated
+      correctness oracle, expected slower, not a serving path.
+    """
+    from repro.configs.fleet_scenarios import build_network_fleet
+    from repro.core import simulate_fleet
+    from repro.kernels import ops
+    from repro.network import NetworkAwareDPPPolicy, StaticRoutePolicy
+
+    V = 0.1
+    per_kind, T = (4, 24) if SMOKE else (64, 192)
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for kind in ("congested-uplink", "multi-region-uk-wan"):
+        fleet = build_network_fleet([kind], per_kind=per_kind, Tc=96,
+                                    seed=0)
+        F = fleet.F
+
+        def run(pol, fleet=fleet):
+            f = jax.jit(lambda: simulate_fleet(pol, fleet, T, key))
+            f()  # compile
+            best, em = np.inf, None
+            for _ in range(3):
+                t0 = time.perf_counter()
+                res = f()
+                jax.block_until_ready(res.cum_emissions)
+                best = min(best, time.perf_counter() - t0)
+                em = np.asarray(res.cum_emissions[:, -1])
+            return best * 1e6, em
+
+        us_b, em_b = run(
+            StaticRoutePolicy(CarbonIntensityPolicy(V=V, fast=True))
+        )
+        rows.append((f"network/{kind}/blind/F{F}xT{T}", us_b / (F * T),
+                     0.0))
+        for backend in ("reference", "pallas"):
+            us, em = run(NetworkAwareDPPPolicy(
+                V=V, fast=True, score_backend=backend
+            ))
+            red = float(100.0 * (1.0 - (em / em_b)).mean())
+            rows.append((
+                f"network/{kind}/aware_{backend}/F{F}xT{T}",
+                us / (F * T), red,
+            ))
+        if SMOKE:
+            break
+
+    # bare route-score kernel contract (single large call)
+    sizes = [(256, 64)] if SMOKE else [(2048, 256), (4096, 512)]
+    rng = np.random.default_rng(0)
+    for M, L in sizes:
+        Qt = jnp.asarray(rng.integers(0, 500, (M, L)).astype(np.float32))
+        pt = jnp.asarray(rng.uniform(0, 5, (M, L)).astype(np.float32))
+        Qcr = jnp.asarray(rng.integers(0, 900, (M, L)).astype(np.float32))
+        extra = jnp.zeros((M, L), jnp.float32)
+        Qe = jnp.asarray(rng.integers(0, 900, M).astype(np.float32))
+        pe = jnp.asarray(rng.uniform(1, 8, M).astype(np.float32))
+        VCt = jnp.asarray(rng.uniform(0, 40, L).astype(np.float32))
+        V_Ce = jnp.float32(15.0)
+        args = (Qt, pt, Qcr, extra, Qe, pe, VCt, V_Ce)
+        f_ref = jax.jit(lambda: ops.route_scores_ref(*args))
+        rows.append((f"network/route_kernel_ref/M{M}xL{L}",
+                     _timeit(f_ref, 10), M * L))
+        f_int = jax.jit(lambda: ops.route_scores(*args, interpret=True))
+        rows.append((f"network/route_kernel_interpret/M{M}xL{L}",
+                     _timeit(f_int, 3), M * L))
+    return rows
+
+
 ALL_BENCHES = [
     bench_table1,
     bench_fig2_random,
@@ -340,4 +427,5 @@ ALL_BENCHES = [
     bench_score_backends,
     bench_fleet,
     bench_forecast_lookahead,
+    bench_network_routing,
 ]

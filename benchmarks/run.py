@@ -13,6 +13,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 from pathlib import Path
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
@@ -32,17 +33,32 @@ def main() -> None:
         if not args.only or any(s in b.__name__ for s in args.only)
     ]
 
+    # provenance stamped on every row so the perf trajectory in
+    # results.json stays comparable across PRs / machines
+    import jax
+
+    env = {
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+    }
+
     ART.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     all_rows = []
     for bench in benches:
+        t0 = time.perf_counter()
         rows = bench()
+        wall_s = time.perf_counter() - t0
         if args.smoke:
             rows = [(f"smoke/{n}", u, d) for n, u, d in rows]
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived:.4f}")
+        # bench_wall_s = total wall time of the bench FUNCTION that
+        # produced the row (shared by its rows) -- compare like-named
+        # benches across PRs, not rows within one bench
         all_rows.extend(
-            {"name": n, "us_per_call": float(u), "derived": float(d)}
+            {"name": n, "us_per_call": float(u), "derived": float(d),
+             "bench_wall_s": round(wall_s, 3), **env}
             for n, u, d in rows
         )
 
@@ -50,10 +66,14 @@ def main() -> None:
     try:
         from benchmarks.roofline import bench_roofline
 
-        for name, us, derived in bench_roofline():
+        t0 = time.perf_counter()
+        roof = bench_roofline()
+        wall_s = time.perf_counter() - t0
+        for name, us, derived in roof:
             print(f"{name},{us:.1f},{derived:.4f}")
             all_rows.append(
-                {"name": name, "us_per_call": us, "derived": derived}
+                {"name": name, "us_per_call": us, "derived": derived,
+                 "bench_wall_s": round(wall_s, 3), **env}
             )
     except Exception as e:  # dry-run not executed yet
         print(f"# roofline skipped: {e}", file=sys.stderr)

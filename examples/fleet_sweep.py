@@ -9,6 +9,7 @@ latency. Swap score_backend="pallas" to route the score pass through
 the fused Pallas kernel (identical actions; compiled on TPU, interpret
 mode here).
 """
+import os
 import time
 
 import jax
@@ -17,8 +18,9 @@ import numpy as np
 from repro.configs.fleet_scenarios import SCENARIOS, build_fleet
 from repro.core import CarbonIntensityPolicy, QueueLengthPolicy, simulate_fleet
 
-PER_KIND = 16
-T = 300
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"  # CI examples-smoke job
+PER_KIND = 2 if SMOKE else 16
+T = 30 if SMOKE else 300
 
 
 def main() -> None:

@@ -14,6 +14,7 @@ Three acts:
      can see how much of the available lookahead value the policy
      captures.
 """
+import os
 import jax
 import numpy as np
 
@@ -39,7 +40,8 @@ from repro.forecast import (
     forecast_errors,
 )
 
-H, T, V = 8, 192, 0.2
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"  # CI examples-smoke job
+H, T, V = 8, (48 if SMOKE else 192), 0.2
 
 
 def act1_forecast_quality(tab):
@@ -60,7 +62,8 @@ def act1_forecast_quality(tab):
 def act2_lookahead_vs_myopic():
     print("\n== 2. lookahead vs myopic on the diurnal-slack fleet "
           f"(F=16, T={T}, V={V}) ==")
-    fleet = build_fleet(["diurnal-slack"], per_kind=16, Tc=96, seed=0)
+    fleet = build_fleet(["diurnal-slack"], per_kind=2 if SMOKE else 16,
+                        Tc=96, seed=0)
     key = jax.random.PRNGKey(0)
 
     def run(policy, forecaster=None):

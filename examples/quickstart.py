@@ -8,7 +8,10 @@ cumulative-emission reductions (paper: 63% random / 54% real-world).
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import jax
+
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"  # CI examples-smoke job
 
 from repro.configs.paper_workloads import V_PAPER, paper_spec
 from repro.core import (
@@ -25,7 +28,7 @@ def main():
     spec = paper_spec()
     arrive = UniformArrivals(M=5, amax=400)
     key = jax.random.PRNGKey(0)
-    T = 2000
+    T = 60 if SMOKE else 2000
 
     print(f"{'scenario':<12} {'policy':<22} {'cum. emissions':>16} "
           f"{'reduction':>10}")

@@ -5,9 +5,12 @@ are deferred -- up to an SLA bound -- when it is high: the paper's
 
     PYTHONPATH=src python examples/serve_batch.py
 """
+import os
 import time
 
 import jax
+
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"  # CI examples-smoke job
 import jax.numpy as jnp
 import numpy as np
 
@@ -32,7 +35,7 @@ def main():
     served = 0
     energy_per_batch = 0.02  # kWh proxy for this tiny model
 
-    for slot in range(16):
+    for slot in range(4 if SMOKE else 16):
         Ce, _ = carbon(jnp.asarray(slot), jax.random.PRNGKey(0))
         ci = float(Ce)
         # two new request batches arrive per slot

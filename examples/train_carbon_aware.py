@@ -12,6 +12,7 @@ mid-run simulated cloud failure with automatic re-routing.
 
     PYTHONPATH=src python examples/train_carbon_aware.py
 """
+import os
 import jax
 import numpy as np
 
@@ -25,7 +26,8 @@ from repro.optim.adamw import AdamW, cosine_schedule, make_train_step
 from repro.orchestrator.green import Cloud, GreenOrchestrator, TrainJob
 
 CKPT_DIR = "/tmp/repro_green_ckpt"
-N_SLOTS = 40
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"  # CI examples-smoke job
+N_SLOTS = 6 if SMOKE else 40
 STEPS_PER_TASK = 4  # each scheduled task = 4 real optimizer steps
 
 

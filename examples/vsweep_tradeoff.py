@@ -4,7 +4,10 @@ values -- emissions fall as O(1/V), queues grow as O(V).
 
     PYTHONPATH=src python examples/vsweep_tradeoff.py
 """
+import os
 import jax
+
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"  # CI examples-smoke job
 import jax.numpy as jnp
 import numpy as np
 
@@ -32,7 +35,7 @@ def main():
     carbon = RandomCarbonSource(N=5)
     arrive = UniformArrivals(M=5, amax=400)
     key = jax.random.PRNGKey(0)
-    T = 2000
+    T = 60 if SMOKE else 2000
     Vs = jnp.asarray([0.002, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5])
 
     res = jax.jit(lambda: simulate_vsweep(

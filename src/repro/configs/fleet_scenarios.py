@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_workloads import A_MAX, paper_spec
@@ -124,6 +125,127 @@ SCENARIOS: Dict[str, Callable[..., Instance]] = {
     "heterogeneous-fleet": heterogeneous_fleet,
     "multi-region-uk": multi_region_uk,
 }
+
+
+# ---------------------------------------------------------------------------
+# WAN topology scenarios (network subsystem). Each generator returns
+# (NetworkSpec, carbon_table, amax, LinkGraph); `build_network_fleet`
+# stacks them into a FleetScenario whose `graph` axis routes every lane
+# through the transfer layer. Task data volumes scale with compute cost
+# (bigger models move bigger artifacts): size[m] = pc[m, 0] / 20.
+
+
+def _task_sizes(spec: NetworkSpec) -> np.ndarray:
+    return (np.asarray(spec.pc, np.float32)[:, 0] / 20.0).astype(
+        np.float32
+    )
+
+
+def star(M: int, N: int, Tc: int, rng: np.random.Generator):
+    """Hub-and-spoke: one finite direct link per cloud. The mildest
+    topology -- bandwidth caps bite only under bursts."""
+    from repro.network.graph import star_graph
+
+    spec = _base(M, N)
+    size = _task_sizes(spec)
+    load = float(0.5 * A_MAX * size.sum())  # mean size-units/slot offered
+    graph = star_graph(
+        M, N, rng, size=size,
+        bw_range=(0.25 * load, 0.7 * load),
+    )
+    amax = np.full((M,), float(A_MAX), np.float32)
+    return spec, diurnal_table(Tc, N, rng), amax, graph
+
+
+def congested_uplink(M: int, N: int, Tc: int, rng: np.random.Generator):
+    """Per cloud: a wide but dirty default uplink and a clean, cheap
+    alternate riding a green backbone whose total bandwidth sits just
+    at the offered load -- the alternates saturate, so a route-aware
+    policy must trade clean-but-queued against dirty-but-instant while
+    a transfer-blind one burns the dirty primaries throughout. The
+    green backbone is priced in the LAST cloud's region (row index N),
+    whose intensity column is scaled down to backbone levels."""
+    from repro.network.graph import congested_uplink_graph
+
+    spec = _base(M, N)
+    size = _task_sizes(spec)
+    amax = np.full((M,), round(0.6 * A_MAX), np.float32)
+    load = float(0.5 * 0.6 * A_MAX * size.sum())  # size-units/slot
+    graph = congested_uplink_graph(
+        M, N, rng, size=size,
+        clean_bw=1.0 * load / N, dirty_bw=10.0 * load / N,
+    )
+    table = diurnal_table(Tc, N, rng)
+    table[:, N] = np.clip(0.25 * table[:, N], 5.0, 120.0)
+    return spec, table, amax, graph
+
+
+def multi_region_uk_wan(
+    M: int, N: int, Tc: int, rng: np.random.Generator
+):
+    """ESO-style regional traces with direct and relayed routes: relays
+    cost ~1.8x the transfer energy but can ride a decorrelated
+    wind-front trough in another region."""
+    from repro.network.graph import multi_region_wan_graph
+
+    spec = _base(M, N)
+    size = _task_sizes(spec)
+    amax = np.full((M,), float(A_MAX), np.float32)
+    load = float(0.5 * A_MAX * size.sum())
+    graph = multi_region_wan_graph(M, N, rng, size=size)
+    # Direct links are provisioned for the full offered load (a
+    # transfer-blind baseline must not be throughput-starved -- the
+    # comparison is about carbon, not capacity); relays add green
+    # arbitrage with less headroom.
+    L = graph.bw.shape[0]
+    direct = np.arange(L) % 2 == 0
+    bw = np.where(direct, load, 0.35 * load).astype(np.float32)
+    graph = graph._replace(
+        bw=jnp.asarray(bw * rng.uniform(0.9, 1.1, L).astype(np.float32))
+    )
+    table = uk_regional_table(
+        Tc, N, seed=int(rng.integers(1 << 30)),
+        rotate=int(rng.integers(len(_UK_REGIONS))),
+    )
+    return spec, table, amax, graph
+
+
+NETWORK_SCENARIOS: Dict[str, Callable] = {
+    "star": star,
+    "congested-uplink": congested_uplink,
+    "multi-region-uk-wan": multi_region_uk_wan,
+}
+
+
+def build_network_fleet(
+    kinds: Sequence[str] = ("congested-uplink", "multi-region-uk-wan"),
+    per_kind: int = 16,
+    M: int = 5,
+    N: int = 5,
+    Tc: int = 96,
+    seed: int = 0,
+) -> FleetScenario:
+    """WAN twin of `build_fleet`: stacks `per_kind` instances of every
+    named topology scenario into one FleetScenario whose stacked
+    LinkGraph routes all lanes through the transfer layer. Graphs must
+    share (M, N, L), so only same-route-count kinds can mix: the
+    default stacks the two 2N-route topologies; "star" (N routes)
+    must be built on its own."""
+    instances, graphs = [], []
+    for i, kind in enumerate(kinds):
+        try:
+            gen = NETWORK_SCENARIOS[kind]
+        except KeyError:
+            raise KeyError(
+                f"unknown network scenario {kind!r}; registered: "
+                f"{sorted(NETWORK_SCENARIOS)}"
+            ) from None
+        for j in range(per_kind):
+            rng = np.random.default_rng((seed, 1 + i, j))
+            spec, table, amax, graph = gen(M, N, Tc, rng)
+            instances.append((spec, table, amax))
+            graphs.append(graph)
+    return stack_scenarios(instances, graphs=graphs)
 
 
 def build_fleet(

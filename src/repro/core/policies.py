@@ -260,14 +260,20 @@ class CarbonIntensityPolicy:
         d = jnp.zeros_like(state.Qc).at[jnp.arange(spec.M), n1].set(d_counts)
 
         # --- Clouds: process most-backlogged-per-energy types. -----------
+        w = self._cloud_fill(c, pc, state.Qc, Pc)
+        return Action(d=d, w=w)
+
+    def _cloud_fill(self, c, pc, Qc, Pc):
+        """Per-cloud greedy processing fill on the c-score matrix
+        (shared with NetworkAwareDPPPolicy, whose dispatch half differs
+        but whose processing half is exactly Algorithm 1's)."""
 
         def per_cloud(c_n, pc_n, Qc_n, Pc_n):
             return self._fill(c_n, pc_n, Qc_n, Pc_n)
 
-        w = jax.vmap(per_cloud, in_axes=(1, 1, 1, 0), out_axes=1)(
-            c, pc, state.Qc, Pc
+        return jax.vmap(per_cloud, in_axes=(1, 1, 1, 0), out_axes=1)(
+            c, pc, Qc, Pc
         )
-        return Action(d=d, w=w)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -65,6 +65,24 @@ class PoissonArrivals:
         return float(self.clip)
 
 
+def init_forecaster_carry(forecaster, N, key, carbon_source, error_params):
+    """Builds the forecaster's scan carry the one canonical way (shared
+    by `simulate` and the WAN `simulate_network`): hand over the carbon
+    key, the playback table when the source carries one, and the
+    per-run (bias, noise) ForecastErrorModel override when given --
+    omitted entirely otherwise so third-party forecasters without an
+    `error` kwarg keep working."""
+    init_kwargs = {}
+    if error_params is not None:
+        init_kwargs["error"] = error_params
+    return forecaster.init(
+        N,
+        key=key,
+        table=getattr(carbon_source, "table", None),
+        **init_kwargs,
+    )
+
+
 class SimResult(NamedTuple):
     emissions: Array      # [T] per-slot carbon emissions C(t)
     cum_emissions: Array  # [T] cumulative sum
@@ -89,6 +107,8 @@ def simulate(
     key: Array,
     state0: NetworkState | None = None,
     forecaster: Callable | None = None,
+    graph=None,
+    error_params=None,
 ) -> SimResult:
     """Runs the network for T slots under `policy`.
 
@@ -103,17 +123,35 @@ def simulate(
     (`carbon_source.table`, e.g. TableCarbonSource / fleet lanes).
     Policies consuming forecasts must accept a `forecast` kwarg
     (LookaheadDPPPolicy does).
+
+    `error_params = (bias, noise)` overrides the forecaster's
+    ForecastErrorModel parameters for this run (traced values allowed:
+    `simulate_fleet` uses it to sweep forecast quality across vmapped
+    lanes; clairvoyant forecasters honor it, statistical ones ignore
+    it).
+
+    When `graph` (a repro.network.LinkGraph) is given the run goes
+    through the WAN transfer layer instead: the in-flight queue
+    Qt [M, L] joins the scan carry, the policy is called with
+    `graph=`/`Qt=` keywords and must return a NetAction, and the result
+    is a NetSimResult (extra Qt / delivered / energy_transfer fields).
     """
+    if graph is not None:
+        from repro.network.sim import simulate_network
+
+        return simulate_network(
+            policy, spec, graph, carbon_source, arrival_source, T, key,
+            state0=state0, forecaster=forecaster,
+            error_params=error_params,
+        )
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
         state0 = init_state(spec.M, spec.N)
     k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
 
     if forecaster is not None:
-        fcarry0 = forecaster.init(
-            spec.N,
-            key=k_carbon,
-            table=getattr(carbon_source, "table", None),
+        fcarry0 = init_forecaster_carry(
+            forecaster, spec.N, k_carbon, carbon_source, error_params
         )
 
     def body(carry, t):
@@ -200,21 +238,35 @@ class FleetScenario(NamedTuple):
     instance (col 0 = edge, cols 1..N = clouds; rows repeat modulo the
     table length), arrivals are per-type uniform U{0..amax} draws so the
     whole scenario is a pytree of arrays that vmaps.
+
+    Optional axes (None = feature off for the whole fleet):
+      graph     -- a stacked repro.network.LinkGraph (leading axis F):
+                   every lane simulates through the WAN transfer layer
+                   and the result is a NetSimResult.
+      err_bias / err_noise -- [F] per-lane ForecastErrorModel overrides,
+                   handed to the forecaster's init as
+                   `error=(bias, noise)`: ONE compiled call sweeps
+                   forecast quality across lanes.
     """
 
     spec: FleetSpec
     carbon: Array        # [F, Tc, N+1] intensity playback tables
     arrival_amax: Array  # [F, M] per-type uniform arrival caps
+    graph: object | None = None       # stacked LinkGraph or None
+    err_bias: Array | None = None     # [F] forecast bias per lane
+    err_noise: Array | None = None    # [F] forecast noise per lane
 
     @property
     def F(self) -> int:
         return self.arrival_amax.shape[0]
 
 
-def stack_scenarios(instances) -> FleetScenario:
+def stack_scenarios(instances, graphs=None) -> FleetScenario:
     """Stacks an iterable of (NetworkSpec, carbon_table [Tc,N+1],
     amax [M]) triples into one FleetScenario. Tables must share Tc and
-    specs must share (M, N)."""
+    specs must share (M, N). `graphs`, when given, is a parallel
+    iterable of LinkGraphs (sharing M, N, L) stacked onto the fleet's
+    graph axis."""
     pes, pcs, Pes, Pcs, tabs, amaxs = [], [], [], [], [], []
     for spec, table, amax in instances:
         pe, pc, Pe, Pc = spec.as_arrays()
@@ -226,13 +278,35 @@ def stack_scenarios(instances) -> FleetScenario:
         amaxs.append(jnp.broadcast_to(
             jnp.asarray(amax, jnp.float32), pe.shape
         ))
-    return FleetScenario(
+    fleet = FleetScenario(
         spec=FleetSpec(
             pe=jnp.stack(pes), pc=jnp.stack(pcs),
             Pe=jnp.stack(Pes), Pc=jnp.stack(Pcs),
         ),
         carbon=jnp.stack(tabs),
         arrival_amax=jnp.stack(amaxs),
+    )
+    if graphs is not None:
+        from repro.network.graph import stack_graphs
+
+        fleet = fleet._replace(graph=stack_graphs(list(graphs)))
+    return fleet
+
+
+def sweep_forecast_errors(
+    fleet: FleetScenario, bias, noise
+) -> FleetScenario:
+    """Attaches per-lane ForecastErrorModel parameters ([F] arrays or
+    scalars, broadcast) so one compiled `simulate_fleet` call sweeps
+    forecast quality across lanes instead of looping configs."""
+    F = fleet.F
+    return fleet._replace(
+        err_bias=jnp.broadcast_to(
+            jnp.asarray(bias, jnp.float32), (F,)
+        ),
+        err_noise=jnp.broadcast_to(
+            jnp.asarray(noise, jnp.float32), (F,)
+        ),
     )
 
 
@@ -249,7 +323,8 @@ def simulate_fleet(
     costs one compilation and one device dispatch.
 
     Returns a SimResult whose every field carries a leading fleet axis
-    [F, ...] (index before using reductions like `final_backlog`).
+    [F, ...] (index before using reductions like `final_backlog`);
+    a NetSimResult when the fleet carries a stacked LinkGraph.
     Instance f draws its own arrival/policy randomness from
     `jax.random.split(key, F)[f]`.
     """
@@ -257,7 +332,7 @@ def simulate_fleet(
     M = fleet.arrival_amax.shape[1]
     keys = jax.random.split(key, F)
 
-    def one(pe, pc, Pe, Pc, ctab, amax, k):
+    def one(pe, pc, Pe, Pc, ctab, amax, k, graph, err):
         spec = NetworkSpec(pe=pe, pc=pc, Pe=Pe, Pc=Pc)
         # TableCarbonSource traces fine with a batched ctab; its .table
         # attribute is also how simulate() hands each lane's slab to
@@ -270,12 +345,21 @@ def simulate_fleet(
 
         return simulate(
             policy, spec, carbon_source, arrival_source, T, k,
-            forecaster=forecaster,
+            forecaster=forecaster, graph=graph, error_params=err,
         )
 
-    return jax.vmap(one)(
+    err = (
+        (fleet.err_bias, fleet.err_noise)
+        if fleet.err_bias is not None else None
+    )
+    return jax.vmap(
+        one,
+        in_axes=(0, 0, 0, 0, 0, 0, 0,
+                 0 if fleet.graph is not None else None,
+                 0 if err is not None else None),
+    )(
         fleet.spec.pe, fleet.spec.pc, fleet.spec.Pe, fleet.spec.Pc,
-        fleet.carbon, fleet.arrival_amax, keys,
+        fleet.carbon, fleet.arrival_amax, keys, fleet.graph, err,
     )
 
 

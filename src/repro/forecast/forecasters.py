@@ -6,7 +6,11 @@ A *forecaster* turns the stream of observed intensity rows into an
 ``core/carbon.py``). The contract shared by every implementation:
 
     H : int                                  -- horizon (slots)
-    init(N, *, key=None, table=None) -> carry     (pytree of arrays)
+    init(N, *, key=None, table=None, error=None) -> carry  (pytree)
+        `error` is an optional (bias, noise) override pair for
+        clairvoyant forecasters' ForecastErrorModel (the per-lane
+        forecast-quality axis of FleetScenario); statistical
+        forecasters ignore it -- their error IS the forecast error.
     update(carry, row [N+1]) -> carry        -- observe slot t's row
     predict(carry, t) -> [H, N+1] float32    -- row 0 = slot t (the
         last *observed* row), rows h>=1 = predictions for t+h
@@ -49,7 +53,7 @@ class Forecaster(Protocol):
 
     H: int
 
-    def init(self, N: int, *, key=None, table=None) -> Any:
+    def init(self, N: int, *, key=None, table=None, error=None) -> Any:
         ...
 
     def update(self, carry: Any, row: Array) -> Any:
@@ -70,8 +74,8 @@ class PersistenceForecaster:
 
     H: int = 8
 
-    def init(self, N: int, *, key=None, table=None):
-        del key, table
+    def init(self, N: int, *, key=None, table=None, error=None):
+        del key, table, error
         return jnp.zeros((N + 1,), jnp.float32)
 
     def update(self, carry, row):
@@ -93,8 +97,8 @@ class SeasonalNaiveForecaster:
     H: int = 8
     period: int = 48
 
-    def init(self, N: int, *, key=None, table=None):
-        del key, table
+    def init(self, N: int, *, key=None, table=None, error=None):
+        del key, table, error
         buf = jnp.zeros((self.period, N + 1), jnp.float32)
         return buf, jnp.int32(0)
 
@@ -123,8 +127,8 @@ class EWMAForecaster:
     H: int = 8
     alpha: float = 0.3
 
-    def init(self, N: int, *, key=None, table=None):
-        del key, table
+    def init(self, N: int, *, key=None, table=None, error=None):
+        del key, table, error
         z = jnp.zeros((N + 1,), jnp.float32)
         return z, z, jnp.int32(0)  # (level, last_row, count)
 
@@ -162,8 +166,8 @@ class RidgeARForecaster:
     window: int = 64
     ridge: float = 1.0
 
-    def init(self, N: int, *, key=None, table=None):
-        del key, table
+    def init(self, N: int, *, key=None, table=None, error=None):
+        del key, table, error
         assert self.window >= 2 * self.lags, "window too short to fit AR"
         buf = jnp.zeros((self.window, N + 1), jnp.float32)
         return buf, jnp.int32(0)

@@ -56,12 +56,27 @@ class ForecastErrorModel:
     def exact(self) -> bool:
         return self.bias == 0.0 and self.noise == 0.0
 
-    def apply(self, truth: Array, t: Array, key: Array | None = None) -> Array:
+    def apply(
+        self,
+        truth: Array,
+        t: Array,
+        key: Array | None = None,
+        bias: Array | None = None,
+        noise: Array | None = None,
+    ) -> Array:
         """truth [H, N+1] -> corrupted forecast [H, N+1]. `key` decorrelates
         realizations across vmapped fleet lanes (each lane folds in its
-        own stream); without it every lane would draw identical errors."""
-        if self.exact:
+        own stream); without it every lane would draw identical errors.
+
+        `bias`/`noise` override the dataclass parameters with (possibly
+        traced) values -- the per-lane forecast-quality axis of
+        `FleetScenario.err_bias/err_noise`. A traced override always
+        takes the corrupted path; bias=noise=0.0 there reproduces the
+        exact forecast bitwise (x*1.0 + 0.0*... == x)."""
+        if bias is None and noise is None and self.exact:
             return truth.astype(jnp.float32)
+        b = jnp.asarray(self.bias if bias is None else bias, jnp.float32)
+        n = jnp.asarray(self.noise if noise is None else noise, jnp.float32)
         truth = truth.astype(jnp.float32)
         h = jnp.sqrt(jnp.arange(truth.shape[0], dtype=jnp.float32))
         if key is None:
@@ -69,7 +84,7 @@ class ForecastErrorModel:
         else:
             key = jax.random.fold_in(key, self.seed)
         eps = jax.random.normal(jax.random.fold_in(key, t), truth.shape)
-        pred = truth * (1.0 + self.bias) + self.noise * truth * h[:, None] * eps
+        pred = truth * (1.0 + b) + n * truth * h[:, None] * eps
         pred = pred.at[0].set(truth[0])
         return jnp.maximum(pred, 0.0)
 
@@ -95,23 +110,26 @@ class ForecastedCarbonSource:
     def __call__(self, t: Array, key: Array) -> Tuple[Array, Array]:
         return self.base(t, key)
 
-    def init(self, N: int, *, key=None, table=None):
+    def init(self, N: int, *, key=None, table=None, error=None):
         del N, table
         if key is None:
             key = jax.random.PRNGKey(0)
-        return key
+        bias, noise = (None, None) if error is None else error
+        return key, bias, noise
 
     def update(self, carry, row):
         del row
         return carry
 
     def predict(self, carry, t):
+        key, bias, noise = carry
+
         def row_at(tt):
-            Ce, Cc = self.base(tt, carry)
+            Ce, Cc = self.base(tt, key)
             return jnp.concatenate([Ce[None], Cc]).astype(jnp.float32)
 
         truth = jax.vmap(row_at)(t + jnp.arange(self.H))
-        return self.error.apply(truth, t, key=carry)
+        return self.error.apply(truth, t, key=key, bias=bias, noise=noise)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,7 +143,7 @@ class ClairvoyantTableForecaster:
     H: int = 8
     error: ForecastErrorModel = ForecastErrorModel()
 
-    def init(self, N: int, *, key=None, table=None):
+    def init(self, N: int, *, key=None, table=None, error=None):
         if table is None:
             raise ValueError(
                 "ClairvoyantTableForecaster needs a playback table: pass a "
@@ -134,13 +152,16 @@ class ClairvoyantTableForecaster:
             )
         if key is None:
             key = jax.random.PRNGKey(0)
-        return jnp.asarray(table, jnp.float32), key
+        bias, noise = (None, None) if error is None else error
+        return jnp.asarray(table, jnp.float32), key, bias, noise
 
     def update(self, carry, row):
         del row
         return carry
 
     def predict(self, carry, t):
-        table, key = carry
+        table, key, bias, noise = carry
         idx = (t + jnp.arange(self.H)) % table.shape[0]
-        return self.error.apply(table[idx], t, key=key)
+        return self.error.apply(
+            table[idx], t, key=key, bias=bias, noise=noise
+        )

@@ -36,9 +36,35 @@ def ssd_chunk_intra(a, x, Bm, Cm, *, block_heads=8, interpret=None):
 
 def carbon_scores(Qc, pc, Qe, pe, Cc, V_Ce, *, block_m=256, block_n=256,
                   interpret=None):
+    """Fused score pass. Off-TPU with interpret=None (auto) this lowers
+    to the bit-identical jnp reference: interpret mode emulates the
+    Pallas grid loop in XLA and is strictly slower than letting XLA
+    fuse the reference, so it is a correctness oracle (interpret=True,
+    as the parity tests pass), never an auto-selected serving path."""
+    if interpret is None and jax.default_backend() != "tpu":
+        return ref.carbon_scores_ref(Qc, pc, Qe, pe, Cc, V_Ce)
     return carbon_score.carbon_scores(
         Qc, pc, Qe, pe, Cc, V_Ce, block_m=block_m, block_n=block_n,
-        interpret=_auto_interpret(interpret),
+        interpret=bool(interpret),
+    )
+
+
+def route_scores(Qt, pt, Qcr, extra, Qe, pe, VCt, V_Ce, *, block_m=256,
+                 block_l=256, interpret=None):
+    """Route-lattice score pass. Dispatch policy differs from the other
+    kernels: off-TPU with interpret=None (auto) this lowers to the
+    bit-identical jnp reference instead of the interpret-mode kernel --
+    interpret mode emulates the grid loop in XLA and is strictly slower
+    than the fused-by-XLA reference, so auto-dispatch treats it as a
+    correctness oracle, not a serving path (DESIGN.md §WAN transfer).
+    Pass interpret=True to force the emulated kernel (parity tests do)."""
+    if interpret is None and jax.default_backend() != "tpu":
+        return ref.route_scores_ref(Qt, pt, Qcr, extra, Qe, pe, VCt, V_Ce)
+    from repro.kernels import route_score
+
+    return route_score.route_scores(
+        Qt, pt, Qcr, extra, Qe, pe, VCt, V_Ce, block_m=block_m,
+        block_l=block_l, interpret=bool(interpret),
     )
 
 
@@ -46,6 +72,7 @@ def carbon_scores(Qc, pc, Qe, pe, Cc, V_Ce, *, block_m=256, block_n=256,
 flash_attention_ref = ref.flash_attention_ref
 ssd_chunk_intra_ref = ref.ssd_chunk_intra_ref
 carbon_scores_ref = ref.carbon_scores_ref
+route_scores_ref = ref.route_scores_ref
 
 
 def flash_decode(q, k, v, pos, *, block_s=512, interpret=None):

@@ -65,6 +65,28 @@ def carbon_scores_ref(Qc, pc, Qe, pe, Cc, V_Ce):
     return c, n1, b
 
 
+def route_scores_ref(Qt, pt, Qcr, extra, Qe, pe, VCt, V_Ce):
+    """-> (route_costs [M,L], l1 [M] int32, b [M]).
+
+    Route-lattice twin of carbon_scores_ref (see kernels/route_score.py):
+    rc[m,l] = V*Ct[l]*pt[m,l] + extra[m,l] + Qt[m,l] + Qc[m,dest[l]],
+    i.e. transfer carbon on the route + optional anticipated destination
+    compute carbon + in-flight backlog + destination backlog. The [M,N,L]
+    lattice arrives pre-collapsed through the dest gather (Qcr, extra);
+    the op order here is the bit-parity contract for the Pallas kernel.
+    """
+    rc = (
+        VCt[None, :].astype(jnp.float32) * pt.astype(jnp.float32)
+        + extra.astype(jnp.float32)
+        + Qt.astype(jnp.float32)
+        + Qcr.astype(jnp.float32)
+    )
+    l1 = jnp.argmin(rc, axis=1).astype(jnp.int32)
+    rmin = jnp.min(rc, axis=1)
+    b = V_Ce * pe.astype(jnp.float32) + rmin - Qe.astype(jnp.float32)
+    return rc, l1, b
+
+
 def flash_decode_ref(q, k, v, pos):
     """q [B,H,hd]; k/v [B,S,K,hd]; attend over cache[:pos+1]."""
     B, H, hd = q.shape

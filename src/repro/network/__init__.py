@@ -1,0 +1,53 @@
+"""Carbon-aware WAN transfer subsystem (beyond-paper).
+
+The paper's model dispatches tasks straight into cloud queues; this
+package inserts the wide-area network in between: a `LinkGraph` of
+bandwidth-capped, carbon-priced routes, an in-flight transfer queue
+`Qt [M, L]` threaded through the simulator's scan carry, and a
+`NetworkAwareDPPPolicy` that ranks (task-type, route, cloud) triples by
+queue drift plus V-weighted end-to-end carbon. See DESIGN.md
+§Carbon-aware WAN transfer subsystem; regression anchor: on
+`direct_graph` the whole stack is bit-identical to the link-free
+simulator under `CarbonIntensityPolicy`.
+"""
+from repro.network.graph import (
+    LinkGraph,
+    congested_uplink_graph,
+    direct_graph,
+    make_graph,
+    multi_region_wan_graph,
+    stack_graphs,
+    star_graph,
+)
+from repro.network.policy import NetworkAwareDPPPolicy, StaticRoutePolicy
+from repro.network.sim import NetSimResult, simulate_network
+from repro.network.transfer import (
+    LinkState,
+    NetAction,
+    init_links,
+    land_in_clouds,
+    network_emissions,
+    step_links,
+    transfer_energy,
+)
+
+__all__ = [
+    "LinkGraph",
+    "LinkState",
+    "NetAction",
+    "NetSimResult",
+    "NetworkAwareDPPPolicy",
+    "StaticRoutePolicy",
+    "congested_uplink_graph",
+    "direct_graph",
+    "init_links",
+    "land_in_clouds",
+    "make_graph",
+    "multi_region_wan_graph",
+    "network_emissions",
+    "simulate_network",
+    "stack_graphs",
+    "star_graph",
+    "step_links",
+    "transfer_energy",
+]

@@ -1,0 +1,201 @@
+"""WAN link graph for carbon-aware transfer scheduling.
+
+A `LinkGraph` describes the routes a dispatched task can take from the
+edge to the clouds. Every route l is characterized by
+
+  dest[l]    -- destination cloud index (several routes may share a
+                destination: multi-path / relay alternatives)
+  bw[l]      -- bandwidth in size-units per slot (jnp.inf = unconstrained)
+  pt[m,l]    -- transfer energy (kWh) to move one type-m task over route l
+  region[l]  -- carbon-region index into the [N+1] intensity row
+                (0 = edge region, 1..N = cloud regions), pricing the
+                route's transfer energy
+  size[m]    -- data volume of a type-m task (same units as bw*slot)
+  primary[n] -- the designated default route to cloud n (what a
+                transfer-blind policy uses)
+
+A physical multi-hop path (edge -> relay cloud -> destination) is
+represented as ONE composite route whose pt sums the hop energies, whose
+bw is the bottleneck hop, and whose region prices the dominant hop --
+that keeps the in-flight state a dense [M, L] array (see transfer.py)
+instead of a per-hop token ring. Everything is a flat pytree of arrays,
+so graphs stack across fleet lanes and vmap through `simulate_fleet`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class LinkGraph(NamedTuple):
+    dest: Array     # [L] int32 destination cloud per route
+    bw: Array       # [L] f32 bandwidth (size-units / slot; inf allowed)
+    pt: Array       # [M, L] f32 transfer energy per task
+    region: Array   # [L] int32 carbon-region index into the [N+1] row
+    size: Array     # [M] f32 data volume per task
+    primary: Array  # [N] int32 default route per cloud
+
+    @property
+    def L(self) -> int:
+        return self.dest.shape[-1]
+
+    @property
+    def M(self) -> int:
+        return self.size.shape[-1]
+
+    @property
+    def N(self) -> int:
+        return self.primary.shape[-1]
+
+
+def make_graph(dest, bw, pt, region, size, primary) -> LinkGraph:
+    """Validating constructor from host (numpy/list) data."""
+    dest = jnp.asarray(dest, jnp.int32)
+    primary = jnp.asarray(primary, jnp.int32)
+    g = LinkGraph(
+        dest=dest,
+        bw=jnp.asarray(bw, jnp.float32),
+        pt=jnp.asarray(pt, jnp.float32),
+        region=jnp.asarray(region, jnp.int32),
+        size=jnp.asarray(size, jnp.float32),
+        primary=primary,
+    )
+    L, M, N = g.L, g.M, g.N
+    if g.bw.shape != (L,) or g.region.shape != (L,):
+        raise ValueError(f"bw/region must be [{L}]")
+    if g.pt.shape != (M, L):
+        raise ValueError(f"pt must be [{M}, {L}], got {g.pt.shape}")
+    if int(dest.max()) >= N or int(dest.min()) < 0:
+        raise ValueError(f"dest out of range for N={N}")
+    if int(g.region.max()) > N or int(g.region.min()) < 0:
+        raise ValueError(f"region indexes the [N+1] intensity row")
+    # zero/negative sizes would make floor(prog/size) NaN deep inside
+    # the scan; negative bandwidth would silently un-transfer work
+    if not bool(jnp.all(g.size > 0)):
+        raise ValueError("size must be strictly positive per task type")
+    if not bool(jnp.all(g.bw >= 0)):
+        raise ValueError("bw must be non-negative (use jnp.inf for "
+                         "unconstrained links)")
+    return g
+
+
+def direct_graph(M: int, N: int) -> LinkGraph:
+    """The degenerate graph: one infinite-bandwidth, zero-transfer-energy
+    link per cloud, in cloud order. Tasks dispatched on route n land in
+    Qc[:, n] the same slot and add zero transfer carbon, so
+    `NetworkAwareDPPPolicy` on this graph is bit-identical to
+    `CarbonIntensityPolicy` -- the subsystem's regression anchor
+    (tests/test_network.py)."""
+    return make_graph(
+        dest=np.arange(N),
+        bw=np.full((N,), np.inf, np.float32),
+        pt=np.zeros((M, N), np.float32),
+        region=np.arange(1, N + 1),
+        size=np.ones((M,), np.float32),
+        primary=np.arange(N),
+    )
+
+
+def star_graph(
+    M: int,
+    N: int,
+    rng: np.random.Generator,
+    size: np.ndarray | None = None,
+    bw_range=(40.0, 160.0),
+    pt_scale: float = 0.6,
+) -> LinkGraph:
+    """One finite-bandwidth direct link per cloud (hub-and-spoke WAN).
+    Transfer energy scales with task size; each link is priced in its
+    destination's carbon region."""
+    size = (np.ones(M, np.float32) if size is None
+            else np.asarray(size, np.float32))
+    bw = rng.uniform(*bw_range, N).astype(np.float32)
+    pt = (pt_scale * size[:, None]
+          * rng.uniform(0.5, 1.5, (1, N))).astype(np.float32)
+    return make_graph(
+        dest=np.arange(N), bw=bw, pt=pt, region=np.arange(1, N + 1),
+        size=size, primary=np.arange(N),
+    )
+
+
+def congested_uplink_graph(
+    M: int,
+    N: int,
+    rng: np.random.Generator,
+    size: np.ndarray | None = None,
+    clean_bw: float = 25.0,
+    dirty_bw: float = 400.0,
+    pt_clean: float = 0.4,
+    pt_dirty: float = 2.5,
+) -> LinkGraph:
+    """Two routes per cloud: the default (primary) uplink is wide but
+    energy-hungry and priced in a dirty region; the alternate is clean
+    and cheap but narrow, so it saturates under load. A transfer-blind
+    policy rides the dirty primaries; a route-aware one drains the clean
+    alternates first and only spills to the primaries when the in-flight
+    backlog Qt prices them out -- the scenario behind the
+    `bench_network_routing` acceptance gate. Links l = 2n are the dirty
+    primaries, l = 2n+1 the clean alternates."""
+    size = (np.ones(M, np.float32) if size is None
+            else np.asarray(size, np.float32))
+    L = 2 * N
+    dest = np.repeat(np.arange(N), 2)
+    bw = np.where(np.arange(L) % 2 == 0, dirty_bw, clean_bw).astype(
+        np.float32
+    ) * rng.uniform(0.9, 1.1, L).astype(np.float32)
+    per_link = np.where(np.arange(L) % 2 == 0, pt_dirty, pt_clean)
+    pt = (size[:, None] * per_link[None, :]
+          * rng.uniform(0.9, 1.1, (1, L))).astype(np.float32)
+    # dirty primaries priced in the destination's own region; clean
+    # alternates all ride a shared green backbone priced in the LAST
+    # cloud's region (row index N -- the congested-uplink scenario
+    # generator makes that column the green one).
+    region = np.where(np.arange(L) % 2 == 0, dest + 1, N)
+    return make_graph(
+        dest=dest, bw=bw, pt=pt, region=region, size=size,
+        primary=2 * np.arange(N),
+    )
+
+
+def multi_region_wan_graph(
+    M: int,
+    N: int,
+    rng: np.random.Generator,
+    size: np.ndarray | None = None,
+    relay_overhead: float = 1.8,
+) -> LinkGraph:
+    """UK-WAN style: every cloud is reachable directly (priced in its own
+    region) and via a composite relay route through another region --
+    more transfer energy (two hops) but potentially much greener pricing
+    when wind fronts decorrelate the regions. Links l = 2n direct,
+    l = 2n+1 relayed."""
+    size = (np.ones(M, np.float32) if size is None
+            else np.asarray(size, np.float32))
+    L = 2 * N
+    dest = np.repeat(np.arange(N), 2)
+    bw = rng.uniform(30.0, 120.0, L).astype(np.float32)
+    hop = rng.uniform(0.3, 0.9, L).astype(np.float32)
+    per_link = np.where(np.arange(L) % 2 == 0, hop, relay_overhead * hop)
+    pt = (size[:, None] * per_link[None, :]).astype(np.float32)
+    relay_region = (dest + 1 + rng.integers(1, N, L)) % (N + 1)
+    region = np.where(np.arange(L) % 2 == 0, dest + 1, relay_region)
+    return make_graph(
+        dest=dest, bw=bw, pt=pt, region=region, size=size,
+        primary=2 * np.arange(N),
+    )
+
+
+def stack_graphs(graphs: Sequence[LinkGraph]) -> LinkGraph:
+    """Stacks graphs (sharing M, N, L) into one pytree with a leading
+    fleet axis, for `FleetScenario.graph` / `simulate_fleet`."""
+    shapes = {(g.M, g.N, g.L) for g in graphs}
+    if len(shapes) != 1:
+        raise ValueError(
+            f"stacked graphs must share (M, N, L); got {sorted(shapes)}"
+        )
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *graphs)

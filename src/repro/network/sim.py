@@ -1,0 +1,152 @@
+"""WAN network simulator: the core `simulate` scan with the in-flight
+transfer queue threaded through the carry.
+
+`core.simulator.simulate(..., graph=...)` delegates here, so every
+existing entry point (simulate_fleet lanes, forecaster threading,
+vmapped sweeps) picks up the transfer layer by passing a LinkGraph.
+Policies run in this world receive two extra keyword arguments each
+slot -- `graph` and the current in-flight queue `Qt [M, L]` -- and
+return a `NetAction(dt [M,L], w [M,N])` instead of an Action.
+
+Slot order (mirrors eqs. (7)-(8) with the link hop inserted):
+  observe (Ce, Cc), arrivals  ->  act (dt, w)  ->  account emissions
+  (edge + per-region transfer + cloud, all at TRUE intensities)  ->
+  links inject dt, drain one slot of bandwidth, deliver  ->
+  Qe loses dispatches / gains arrivals, Qc loses w / gains deliveries.
+
+With the degenerate `direct_graph` (infinite bandwidth, zero transfer
+energy) deliveries equal dispatches in the same slot and the transfer
+emission term is exactly +0.0, so the whole trajectory is bit-identical
+to the link-free `simulate` -- the parity anchor in tests/test_network.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.queueing import NetworkState, NetworkSpec, init_state
+from repro.core.simulator import init_forecaster_carry
+from repro.network.graph import LinkGraph
+from repro.network.transfer import (
+    LinkState,
+    NetAction,
+    init_links,
+    land_in_clouds,
+    network_emissions,
+    step_links,
+    transfer_energy,
+)
+
+Array = jax.Array
+
+
+class NetSimResult(NamedTuple):
+    emissions: Array        # [T] per-slot end-to-end carbon
+    cum_emissions: Array    # [T] cumulative sum
+    Qe: Array               # [T, M] edge queues (post-step)
+    Qc: Array               # [T, M, N] cloud queues (post-step)
+    Qt: Array               # [T, M, L] in-flight transfers (post-step)
+    dispatched: Array       # [T] tasks put onto links
+    delivered: Array        # [T] tasks landed in cloud queues
+    processed: Array        # [T] tasks processed
+    energy_edge: Array      # [T] edge dispatch energy
+    energy_transfer: Array  # [T] WAN transfer energy
+    energy_cloud: Array     # [T, N] cloud compute energy
+
+    @property
+    def final_backlog(self) -> Array:
+        return (
+            self.Qe[-1].sum() + self.Qc[-1].sum() + self.Qt[-1].sum()
+        )
+
+
+def simulate_network(
+    policy: Callable,
+    spec: NetworkSpec,
+    graph: LinkGraph,
+    carbon_source: Callable,
+    arrival_source: Callable,
+    T: int,
+    key: Array,
+    state0: NetworkState | None = None,
+    forecaster: Callable | None = None,
+    error_params=None,
+) -> NetSimResult:
+    """Runs the network + WAN for T slots under a route-aware policy.
+
+    `forecaster` / `error_params` behave exactly as in
+    `core.simulator.simulate`: the forecast carry threads through the
+    scan, `error_params = (bias, noise)` overrides the forecaster's
+    ForecastErrorModel per call (that is how `simulate_fleet` sweeps
+    forecast quality across lanes), and emissions are always accounted
+    against the TRUE intensities.
+    """
+    pe, pc, _, _ = spec.as_arrays()
+    if state0 is None:
+        state0 = init_state(spec.M, spec.N)
+    ls0 = init_links(spec.M, graph.L)
+    k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
+
+    if forecaster is not None:
+        fcarry0 = init_forecaster_carry(
+            forecaster, spec.N, k_carbon, carbon_source, error_params
+        )
+
+    def body(carry, t):
+        state, ls, fcarry = carry
+        Ce, Cc = carbon_source(t, k_carbon)
+        a = arrival_source(t, k_arrive)
+        k_t = jax.random.fold_in(k_policy, t)
+        if forecaster is None:
+            act: NetAction = policy(
+                state, spec, Ce, Cc, a, k_t, graph=graph, Qt=ls.Qt
+            )
+        else:
+            fcarry = forecaster.update(
+                fcarry, jnp.concatenate([Ce[None], Cc])
+            )
+            act = policy(
+                state, spec, Ce, Cc, a, k_t, graph=graph, Qt=ls.Qt,
+                forecast=forecaster.predict(fcarry, t),
+            )
+        C_t = network_emissions(spec, graph, act, Ce, Cc)
+        ls_next, delivered = step_links(ls, graph, act.dt)
+        land = land_in_clouds(delivered, graph, spec.N)
+        d_sum = jnp.sum(act.dt, axis=1)
+        nxt = NetworkState(
+            Qe=jnp.maximum(state.Qe - d_sum, 0.0) + a,
+            Qc=jnp.maximum(state.Qc - act.w, 0.0) + land,
+        )
+        out = (
+            C_t,
+            nxt.Qe,
+            nxt.Qc,
+            ls_next.Qt,
+            jnp.sum(act.dt),
+            jnp.sum(delivered),
+            jnp.sum(act.w),
+            jnp.sum(act.dt * pe[:, None]),
+            jnp.sum(transfer_energy(graph, act.dt)),
+            jnp.sum(act.w * pc, axis=0),
+        )
+        return (nxt, ls_next, fcarry), out
+
+    carry0 = (state0, ls0, fcarry0 if forecaster is not None else ())
+    _, (C, Qe, Qc, Qt, disp, deliv, proc, ee, et, ec) = jax.lax.scan(
+        body, carry0, jnp.arange(T)
+    )
+    return NetSimResult(
+        emissions=C,
+        cum_emissions=jnp.cumsum(C),
+        Qe=Qe,
+        Qc=Qc,
+        Qt=Qt,
+        dispatched=disp,
+        delivered=deliv,
+        processed=proc,
+        energy_edge=ee,
+        energy_transfer=et,
+        energy_cloud=ec,
+    )

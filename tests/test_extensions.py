@@ -3,6 +3,7 @@ adaptive-V controller."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.paper_workloads import paper_spec
 from repro.core import (
@@ -109,3 +110,64 @@ def test_adaptive_v_holds_backlog_near_target():
     assert tail.mean() < 3 * target
     assert tail.mean() > target / 5
     assert ctrl.v_min < ctrl.V < ctrl.v_max
+
+
+def test_oracle_horizon_monotone_in_H_and_lower_bounds_every_policy():
+    """ISSUE-4 satellite: on one fixed scenario, the clairvoyant-horizon
+    oracle (a) is monotone non-increasing in H on every policy's own
+    energy profile, and (b) lower-bounds the realized emissions of every
+    policy at every horizon."""
+    from repro.core.extensions import oracle_emissions_horizon
+
+    spec = paper_spec()
+    T = 250
+    carbon, arrive, key, ctab, _ = _tables(T, seed=4)
+    horizons = [1, 2, 3, 4, 6, 8, 12, 16, 24, None]
+    for pol in (
+        CarbonIntensityPolicy(V=0.05),
+        CarbonIntensityPolicy(V=0.2, fast=True),
+        QueueLengthPolicy(),
+        ThresholdPolicy(threshold=250.0),
+    ):
+        r = simulate(pol, spec, carbon, arrive, T, key)
+        realized = float(r.cum_emissions[-1])
+        bounds = [
+            oracle_emissions_horizon(
+                ctab, np.asarray(r.energy_edge),
+                np.asarray(r.energy_cloud), horizon=h,
+            )
+            for h in horizons
+        ]
+        for b_prev, b_next in zip(bounds, bounds[1:]):
+            assert b_next <= b_prev * (1 + 1e-9), (b_prev, b_next)
+        for h, b in zip(horizons, bounds):
+            assert b <= realized * (1 + 1e-6), (pol, h, b, realized)
+        # H=1 re-prices each kWh at its own slot: exactly the realized cost
+        assert bounds[0] == pytest.approx(realized, rel=1e-5)
+
+
+def test_adaptive_v_update_direction_and_clamps():
+    """ISSUE-4 satellite: the multiplicative V feedback moves V the
+    right way -- backlog above the band drains queues (V down), below
+    the band chases carbon (V up), inside the band holds -- and always
+    respects [v_min, v_max]."""
+    c = AdaptiveVController(target_backlog=100.0, V=0.05, step=1.15,
+                            band=0.25)
+    v = c.V
+    assert c.update(1000.0) < v          # backlog blow-up -> drain
+    v = c.V
+    assert c.update(1.0) > v             # idle queues -> chase carbon
+    v = c.V
+    assert c.update(100.0) == v          # inside the band -> hold
+    assert c.update(124.9) == v          # band edge (below 1+band)
+    assert c.update(75.1) == v           # band edge (above 1-band)
+
+    lo = AdaptiveVController(target_backlog=100.0, V=1e-4)
+    for _ in range(10):
+        lo.update(1e9)
+    assert lo.V == pytest.approx(lo.v_min)
+
+    hi = AdaptiveVController(target_backlog=100.0, V=9.9)
+    for _ in range(10):
+        hi.update(0.0)
+    assert hi.V == pytest.approx(hi.v_max)

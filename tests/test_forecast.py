@@ -329,3 +329,69 @@ def test_oracle_horizon_rejects_mismatched_columns():
         oracle_emissions_horizon(
             tab, np.zeros(10), np.zeros((10, 2)), horizon=2
         )
+
+
+def test_per_lane_forecast_error_sweep_in_one_call():
+    """ISSUE-4 satellite: FleetScenario.err_bias/err_noise sweep
+    forecast quality ACROSS LANES of one compiled simulate_fleet call.
+    A zero-error lane reproduces the no-override run exactly; noisier
+    lanes genuinely diverge."""
+    from repro.configs.fleet_scenarios import build_fleet
+    from repro.core.simulator import sweep_forecast_errors
+
+    fleet = build_fleet(["diurnal-slack"], per_kind=4, Tc=96, seed=0)
+    noises = jnp.asarray([0.0, 0.1, 0.3, 0.6])
+    fleet_err = sweep_forecast_errors(fleet, bias=0.0, noise=noises)
+    assert fleet_err.err_bias.shape == (4,)  # scalar bias broadcast
+
+    pol = LookaheadDPPPolicy(V=0.2, fast=True, H=8, discount=0.98,
+                             defer_weight=2.0)
+    fc = ClairvoyantTableForecaster(H=8)
+    key = jax.random.PRNGKey(3)
+    T = 72
+    res = jax.jit(lambda k: simulate_fleet(
+        pol, fleet_err, T, k, forecaster=fc
+    ))(key)
+    base = simulate_fleet(pol, fleet, T, key, forecaster=fc)
+
+    # lane 0 carries (bias=0, noise=0): the traced-override path must
+    # reproduce the exact-forecast run -- queue trajectories bitwise.
+    np.testing.assert_array_equal(
+        np.asarray(res.Qe[0]), np.asarray(base.Qe[0])
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.cum_emissions[0]),
+        np.asarray(base.cum_emissions[0]), rtol=1e-6,
+    )
+    # noisy lanes take different actions than their exact twins
+    assert not np.array_equal(np.asarray(res.Qe[3]), np.asarray(base.Qe[3]))
+
+
+def test_per_lane_bias_shifts_deferral():
+    """Systematic over-prediction of future intensity (positive bias
+    inflates forecast troughs less than it inflates the future in
+    general... the sign contract: bias != 0 changes behavior) -- and
+    the per-lane bias axis reaches the forecaster."""
+    from repro.configs.fleet_scenarios import build_fleet
+    from repro.core.simulator import sweep_forecast_errors
+
+    fleet = build_fleet(["diurnal-slack"], per_kind=2, Tc=96, seed=1)
+    fleet_err = sweep_forecast_errors(
+        fleet, bias=jnp.asarray([0.0, -0.5]), noise=0.0
+    )
+    pol = LookaheadDPPPolicy(V=0.2, fast=True, H=8, discount=1.0,
+                             defer_weight=3.0)
+    res = simulate_fleet(
+        pol, fleet_err, 72, jax.random.PRNGKey(0),
+        forecaster=ClairvoyantTableForecaster(H=8),
+    )
+    base = simulate_fleet(
+        pol, fleet, 72, jax.random.PRNGKey(0),
+        forecaster=ClairvoyantTableForecaster(H=8),
+    )
+    # bias=0 lane matches; bias=-0.5 lane (hallucinated deep troughs ->
+    # over-deferral) diverges
+    np.testing.assert_array_equal(
+        np.asarray(res.Qe[0]), np.asarray(base.Qe[0])
+    )
+    assert not np.array_equal(np.asarray(res.Qc[1]), np.asarray(base.Qc[1]))

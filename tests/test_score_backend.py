@@ -45,9 +45,12 @@ def test_pallas_backend_actions_bit_identical(M, N, bm, bn, fast):
     for trial in range(3):
         spec, state, Ce, Cc = _random_instance(rng, M, N)
         ref = CarbonIntensityPolicy(V=0.05, fast=fast)
+        # score_interpret=True forces the real (emulated) kernel on CPU;
+        # the default None auto-dispatches to the reference off-TPU
+        # (covered by test_auto_dispatch_matches_reference).
         pal = CarbonIntensityPolicy(
             V=0.05, fast=fast, score_backend="pallas",
-            score_block_m=bm, score_block_n=bn,
+            score_block_m=bm, score_block_n=bn, score_interpret=True,
         )
         a_ref = jax.jit(lambda s: ref(s, spec, Ce, Cc, None, None))(state)
         a_pal = jax.jit(lambda s: pal(s, spec, Ce, Cc, None, None))(state)
@@ -59,6 +62,20 @@ def test_pallas_backend_actions_bit_identical(M, N, bm, bn, fast):
             np.asarray(a_ref.w), np.asarray(a_pal.w),
             err_msg=f"w differs (trial {trial})",
         )
+
+
+def test_auto_dispatch_matches_reference():
+    """With score_interpret=None (auto) the pallas backend lowers to
+    whatever serves fastest on this platform (the jnp reference off-TPU,
+    the fused kernel on TPU) -- actions must be identical either way."""
+    rng = np.random.default_rng(42)
+    spec, state, Ce, Cc = _random_instance(rng, 64, 16)
+    ref = CarbonIntensityPolicy(V=0.05)
+    auto = CarbonIntensityPolicy(V=0.05, score_backend="pallas")
+    a_ref = jax.jit(lambda s: ref(s, spec, Ce, Cc, None, None))(state)
+    a_auto = jax.jit(lambda s: auto(s, spec, Ce, Cc, None, None))(state)
+    np.testing.assert_array_equal(np.asarray(a_ref.d), np.asarray(a_auto.d))
+    np.testing.assert_array_equal(np.asarray(a_ref.w), np.asarray(a_auto.w))
 
 
 def test_unknown_backend_raises():
@@ -83,7 +100,8 @@ def test_pallas_backend_inside_simulation():
     )
     r_pal = simulate(
         CarbonIntensityPolicy(V=0.05, score_backend="pallas",
-                              score_block_m=8, score_block_n=8),
+                              score_block_m=8, score_block_n=8,
+                              score_interpret=True),
         spec, carbon, arrive, 20, key,
     )
     np.testing.assert_array_equal(
