@@ -132,7 +132,12 @@ def bench_fig4_queues() -> List[Row]:
 
 def bench_vsweep() -> List[Row]:
     """Beyond-paper: the whole Fig2+Fig4 tradeoff curve in ONE vmapped
-    simulation (emissions reduction and delay vs V)."""
+    simulation (emissions reduction and delay vs V).
+
+    Timing lives on the single `vsweep/total` row (us_per_call = one
+    whole-sweep call, derived = sweep width); the per-V rows carry only
+    the derived reduction % -- previously every per-V row repeated the
+    amortized sweep time, which read as if each V cost that much."""
     spec, arrive, key, T, carbon = _paper_setup(RandomCarbonSource(N=5))
     Vs = jnp.asarray([0.005, 0.01, 0.02, 0.05, 0.1, 0.2])
 
@@ -145,11 +150,12 @@ def bench_vsweep() -> List[Row]:
         QueueLengthPolicy(), spec, carbon, arrive, T, key
     ).cum_emissions[-1])())
     cums = np.asarray(f())
-    return [
-        (f"vsweep/V={float(v):g}", us / len(cums),
-         100.0 * (1 - c / base))
+    rows: List[Row] = [("vsweep/total", us, float(len(cums)))]
+    rows += [
+        (f"vsweep/V={float(v):g}", 0.0, 100.0 * (1 - c / base))
         for v, c in zip(Vs, cums)
     ]
+    return rows
 
 
 def _random_instance(rng, M, N):
@@ -200,7 +206,7 @@ def bench_score_backends() -> List[Row]:
         spec, state, Ce, Cc = _random_instance(rng, M, N)
         for backend in ("reference", "pallas"):
             pol = CarbonIntensityPolicy(
-                V=0.05, fast=True, score_backend=backend
+                V=0.05, score_backend=backend
             )
             f = jax.jit(lambda s, pol=pol: pol(s, spec, Ce, Cc, None, None))
             us = _timeit(lambda: f(state), n=10)
@@ -222,6 +228,128 @@ def bench_score_backends() -> List[Row]:
             Qc, pc, Qe, pe, Cc, jnp.float32(15.0), interpret=interp
         ))
         rows.append((f"score_pallas/M{M}xN{N}", _timeit(f_pal, 10), M * N))
+    return rows
+
+
+def _seq_policy_action(spec, state, Ce, Cc, V):
+    """Sequential-fill oracle action (float32 numpy walk, the semantics
+    the chunked greedy_fill replaced) -- the bench-level bit-parity
+    anchor for the policy_fast rows."""
+    from repro.kernels import ref
+
+    pe, pc, Pe, Pc = spec.as_arrays()
+    c, n1, b = ref.carbon_scores_ref(
+        state.Qc, pc, state.Qe, pe,
+        jnp.float32(V) * Cc, jnp.float32(V) * Ce,
+    )
+    c = np.asarray(c)
+    b = np.asarray(b)
+    n1 = np.asarray(n1)
+    pe_n = np.asarray(pe)
+    pc_n = np.asarray(pc)
+    Qe = np.asarray(state.Qe)
+    Qc = np.asarray(state.Qc)
+    f32 = np.float32
+
+    def walk(scores, e, caps, budget):
+        order = np.argsort(scores / e, kind="stable")
+        P = f32(budget)
+        take = np.zeros_like(scores)
+        for m in order:
+            fits = f32(np.floor(P / e[m]))
+            if fits <= 0:
+                break  # default stop_at_first_unfit semantics
+            if scores[m] < 0:
+                t = f32(min(caps[m], fits))
+                take[m] = t
+                P = f32(P - f32(t * e[m]))
+        return take
+
+    M, N = pc_n.shape
+    d = np.zeros((M, N), f32)
+    d[np.arange(M), n1] = walk(b, pe_n, Qe, float(Pe))
+    w = np.stack(
+        [walk(c[:, n], pc_n[:, n], Qc[:, n], float(np.asarray(Pc)[n]))
+         for n in range(N)],
+        axis=1,
+    )
+    return d, w
+
+
+def bench_policy_fast() -> List[Row]:
+    """The tentpole row family: full default-config policy step at
+    large M/N through the chunked top_k fill. Before timing, every
+    instance asserts the actions are bit-identical to the sequential
+    fill on the same inputs -- a wrong-but-fast fill can never post a
+    number. derived = problem size M*N."""
+    from repro.core.policies import CarbonIntensityPolicy
+
+    sizes = [(256, 32)] if SMOKE else [
+        (1024, 128), (2048, 128), (2048, 256), (4096, 256),
+    ]
+    rows = []
+    rng = np.random.default_rng(0)
+    pol = CarbonIntensityPolicy(V=0.05)
+    for M, N in sizes:
+        spec, state, Ce, Cc = _random_instance(rng, M, N)
+        f = jax.jit(lambda s, pol=pol, spec=spec, Ce=Ce, Cc=Cc: pol(
+            s, spec, Ce, Cc, None, None
+        ))
+        act = f(state)
+        d_ref, w_ref = _seq_policy_action(spec, state, Ce, Cc, 0.05)
+        np.testing.assert_array_equal(np.asarray(act.d), d_ref)
+        np.testing.assert_array_equal(np.asarray(act.w), w_ref)
+        us = _timeit(lambda: f(state), n=10)
+        rows.append((f"policy_fast/M{M}xN{N}", us, M * N))
+    return rows
+
+
+def bench_fleet_summary() -> List[Row]:
+    """Recording-mode rows: F diurnal lanes x T=192 slots in ONE
+    compiled call with record="summary" (per-slot scalars + final state
+    only -- the mode that unlocks F >= 512). us_per_call is per
+    lane-slot; derived = the full-recording per-lane-slot time at the
+    same F (0.0 where full recording is skipped). The F=256 instance
+    asserts the summary scalar series is bitwise identical to full
+    recording before timing."""
+    from repro.configs.fleet_scenarios import build_fleet
+    from repro.core import CarbonIntensityPolicy, simulate_fleet
+
+    Fs = (8,) if SMOKE else (256, 512)
+    T = 24 if SMOKE else 192
+    key = jax.random.PRNGKey(0)
+    pol = CarbonIntensityPolicy(V=0.05)
+    rows = []
+    for F in Fs:
+        fleet = build_fleet(["diurnal"], per_kind=F, Tc=96, seed=0)
+
+        def run(record, fleet=fleet):
+            g = jax.jit(lambda k: simulate_fleet(
+                pol, fleet, T, k, record=record
+            ))
+            res = g(key)  # compile + value
+            jax.block_until_ready(res.cum_emissions)
+            best = np.inf
+            for _ in range(3):
+                t0 = time.perf_counter()
+                out = g(key)
+                jax.block_until_ready(out.cum_emissions)
+                best = min(best, time.perf_counter() - t0)
+            return best * 1e6, res
+
+        us_sum, r_sum = run("summary")
+        full_us = 0.0
+        if F == Fs[0]:
+            full_us, r_full = run("full")
+            np.testing.assert_array_equal(
+                np.asarray(r_full.emissions), np.asarray(r_sum.emissions)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(r_full.Qe[:, -1]), np.asarray(r_sum.Qe[:, 0])
+            )
+            full_us = full_us / (F * T)
+        assert r_sum.Qe.shape[1] == 1
+        rows.append((f"fleet_summary/F{F}", us_sum / (F * T), full_us))
     return rows
 
 
@@ -296,14 +424,14 @@ def bench_forecast_lookahead() -> List[Row]:
             )
             return us, em, bl
 
-        _, em_base, bl_base = run(CarbonIntensityPolicy(V=V, fast=True))
+        _, em_base, bl_base = run(CarbonIntensityPolicy(V=V))
 
         def red(em):
             return float(100.0 * (1.0 - (em / em_base)).mean())
 
         configs = [
             (f"la_H{H}_perfect",
-             LookaheadDPPPolicy(V=V, fast=True, H=H, discount=1.0,
+             LookaheadDPPPolicy(V=V, H=H, discount=1.0,
                                 defer_weight=3.0),
              ClairvoyantTableForecaster(H=H))
             for H in horizons
@@ -312,15 +440,15 @@ def bench_forecast_lookahead() -> List[Row]:
             noisy = ForecastErrorModel(noise=0.2, seed=7)
             configs += [
                 ("la_H8_noisy20",
-                 LookaheadDPPPolicy(V=V, fast=True, H=8, discount=0.98,
+                 LookaheadDPPPolicy(V=V, H=8, discount=0.98,
                                     defer_weight=2.0),
                  ClairvoyantTableForecaster(H=8, error=noisy)),
                 ("la_H8_persistence",
-                 LookaheadDPPPolicy(V=V, fast=True, H=8, discount=0.98,
+                 LookaheadDPPPolicy(V=V, H=8, discount=0.98,
                                     defer_weight=2.0),
                  PersistenceForecaster(H=8)),
                 ("la_H8_seasonal",
-                 LookaheadDPPPolicy(V=V, fast=True, H=8, discount=0.98,
+                 LookaheadDPPPolicy(V=V, H=8, discount=0.98,
                                     defer_weight=2.0),
                  SeasonalNaiveForecaster(H=8, period=48)),
             ]
@@ -379,13 +507,13 @@ def bench_network_routing() -> List[Row]:
             return best * 1e6, em
 
         us_b, em_b = run(
-            StaticRoutePolicy(CarbonIntensityPolicy(V=V, fast=True))
+            StaticRoutePolicy(CarbonIntensityPolicy(V=V))
         )
         rows.append((f"network/{kind}/blind/F{F}xT{T}", us_b / (F * T),
                      0.0))
         for backend in ("reference", "pallas"):
             us, em = run(NetworkAwareDPPPolicy(
-                V=V, fast=True, score_backend=backend
+                V=V, score_backend=backend
             ))
             red = float(100.0 * (1.0 - (em / em_b)).mean())
             rows.append((
@@ -424,8 +552,10 @@ ALL_BENCHES = [
     bench_fig4_queues,
     bench_vsweep,
     bench_policy_throughput,
+    bench_policy_fast,
     bench_score_backends,
     bench_fleet,
+    bench_fleet_summary,
     bench_forecast_lookahead,
     bench_network_routing,
 ]

@@ -1,0 +1,78 @@
+"""Renders the README perf table from artifacts/bench/results.json.
+
+    python -m benchmarks.perf_table
+
+Prints a markdown table of the policy-step rows (per-slot latency of
+the full default-config CarbonIntensityPolicy at large M/N) next to
+the last numbers committed under the previous fill engine (PR 4), so
+the before/after speedup stays visible after the rows are re-benched.
+Paste the output into README.md when the numbers move.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = (
+    Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+    / "results.json"
+)
+
+# us_per_call of the same workloads under the pre-unification (PR 4)
+# engine -- the "before" column. Keys are the current policy_fast row
+# names. NOTE the provenance: the policy_reference rows were benched
+# with fast=True, i.e. the old argsort+cumsum path (whose while-tail
+# degenerated to ~M sequential steps at these budgets); only the
+# M2048xN256 number (old bench_policy_throughput default config) is the
+# plain sequential lax.scan fill. Both old paths paid the ~250 ms
+# batched argsort, which is why they land within ~2x of each other.
+PR4_ENGINE_BASELINE_US = {
+    "policy_fast/M1024xN128": 37817.5,   # policy_reference/M1024xN128 (fast=True)
+    "policy_fast/M2048xN256": 276625.9,  # policy/M2048xN256 (sequential scan)
+    "policy_fast/M4096xN256": 493383.7,  # policy_reference/M4096xN256 (fast=True)
+}
+
+
+def render(rows) -> str:
+    by_name = {r["name"]: r for r in rows}
+    lines = [
+        "| policy step (default config) | PR 4 engine "
+        "| chunked top_k fill | speedup |",
+        "|---|---|---|---|",
+    ]
+    for name, before in PR4_ENGINE_BASELINE_US.items():
+        row = by_name.get(name)
+        if row is None:
+            continue
+        after = row["us_per_call"]
+        lines.append(
+            f"| {name.split('/')[1]} | {before / 1e3:.1f} ms "
+            f"| {after / 1e3:.1f} ms | {before / after:.1f}x |"
+        )
+    summary = [
+        r for r in rows if r["name"].startswith("fleet_summary/")
+    ]
+    if summary:
+        lines.append("")
+        lines.append(
+            "| fleet, record=\"summary\" | us / lane-slot "
+            "| full recording |"
+        )
+        lines.append("|---|---|---|")
+        for r in sorted(summary, key=lambda r: r["name"]):
+            full = (
+                f"{r['derived']:.2f} us" if r["derived"] else "not run"
+            )
+            lines.append(
+                f"| {r['name'].split('/')[1]} x T192 "
+                f"| {r['us_per_call']:.2f} us | {full} |"
+            )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    print(render(json.loads(RESULTS.read_text())))
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,12 @@ results.json instead of clobbering the full set. ``--smoke`` shrinks
 bench instances to CI size (every code path compiles and runs; the
 numbers are not representative) and prefixes row names with ``smoke/``
 so a smoke run can never clobber committed full-size results.
+``--compare`` diffs every fresh row's us_per_call against the committed
+results.json BEFORE merging and exits nonzero when any row regresses by
+more than ``--compare-tol`` (default 25%); rows faster than
+``--compare-floor`` microseconds in the baseline are skipped as timer
+noise. CI's bench-smoke job runs ``--smoke --compare`` against the
+committed ``smoke/*`` baseline rows.
 """
 from __future__ import annotations
 
@@ -26,6 +32,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", action="append", default=[])
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--compare", action="store_true",
+                    help="fail on >tol us_per_call regression vs the "
+                         "committed results.json")
+    ap.add_argument("--compare-tol", type=float, default=0.25)
+    ap.add_argument("--compare-floor", type=float, default=100.0,
+                    help="skip baseline rows faster than this many "
+                         "microseconds (timer noise)")
     args = ap.parse_args()
     paper_benches.SMOKE = args.smoke
     benches = [
@@ -79,14 +92,44 @@ def main() -> None:
         print(f"# roofline skipped: {e}", file=sys.stderr)
 
     out = ART / "results.json"
+    committed = json.loads(out.read_text()) if out.exists() else []
+
+    # --compare: diff fresh rows against the committed baseline BEFORE
+    # merging, so the gate always sees the pre-run numbers.
+    regressions = []
+    if args.compare:
+        base = {r["name"]: r["us_per_call"] for r in committed}
+        for r in all_rows:
+            old = base.get(r["name"])
+            if old is None or old < args.compare_floor:
+                continue
+            if r["us_per_call"] > old * (1.0 + args.compare_tol):
+                regressions.append((r["name"], old, r["us_per_call"]))
+        for name, old, new in regressions:
+            print(
+                f"# REGRESSION {name}: {old:.1f} -> {new:.1f} us "
+                f"(+{100.0 * (new / old - 1):.0f}% > "
+                f"{100.0 * args.compare_tol:.0f}% tolerance)",
+                file=sys.stderr,
+            )
+
     # smoke rows are smoke/-prefixed (disjoint names), so a smoke run
     # must also merge -- never clobber committed full-size rows.
-    if (args.only or args.smoke) and out.exists():
+    if (args.only or args.smoke) and committed:
         kept = [
-            r for r in json.loads(out.read_text())
+            r for r in committed
             if r["name"] not in {x["name"] for x in all_rows}
         ]
         all_rows = kept + all_rows
+    if regressions:
+        # Leave results.json untouched: writing the regressed numbers
+        # would install them as the next run's baseline and launder the
+        # regression away on re-run.
+        print(
+            f"# results.json NOT updated ({len(regressions)} regression"
+            f"{'s' if len(regressions) != 1 else ''})", file=sys.stderr,
+        )
+        sys.exit(1)
     out.write_text(json.dumps(all_rows, indent=2))
 
 

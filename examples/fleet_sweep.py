@@ -38,7 +38,7 @@ def main() -> None:
         res.cum_emissions.block_until_ready()
         return res, time.perf_counter() - t0
 
-    carb, dt = run(CarbonIntensityPolicy(V=0.05, fast=True))
+    carb, dt = run(CarbonIntensityPolicy(V=0.05))
     base, _ = run(QueueLengthPolicy())
     print(f"engine: {dt * 1e6 / (fleet.F * T):.2f} us per instance-slot "
           f"({dt:.3f} s for the whole fleet)")

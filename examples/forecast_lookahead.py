@@ -74,23 +74,23 @@ def act2_lookahead_vs_myopic():
         bl = np.asarray(res.Qe[:, -1].sum(-1) + res.Qc[:, -1].sum((-2, -1)))
         return em, bl
 
-    em0, bl0 = run(CarbonIntensityPolicy(V=V, fast=True))
+    em0, bl0 = run(CarbonIntensityPolicy(V=V))
     perfect = dict(discount=1.0, defer_weight=3.0)
     realistic = dict(discount=0.98, defer_weight=2.0)
     for name, pol, fc in [
         ("myopic (baseline)", None, None),
         ("lookahead H=1 (== myopic)",
-         LookaheadDPPPolicy(V=V, fast=True, H=1, **perfect),
+         LookaheadDPPPolicy(V=V, H=1, **perfect),
          ClairvoyantTableForecaster(H=1)),
         ("lookahead H=8, perfect",
-         LookaheadDPPPolicy(V=V, fast=True, H=8, **perfect),
+         LookaheadDPPPolicy(V=V, H=8, **perfect),
          ClairvoyantTableForecaster(H=8)),
         ("lookahead H=8, 20% noise",
-         LookaheadDPPPolicy(V=V, fast=True, H=8, **realistic),
+         LookaheadDPPPolicy(V=V, H=8, **realistic),
          ClairvoyantTableForecaster(
              H=8, error=ForecastErrorModel(noise=0.2, seed=7))),
         ("lookahead H=8, seasonal-naive",
-         LookaheadDPPPolicy(V=V, fast=True, H=8, **realistic),
+         LookaheadDPPPolicy(V=V, H=8, **realistic),
          SeasonalNaiveForecaster(H=8, period=48)),
     ]:
         em, bl = (em0, bl0) if pol is None else run(pol, fc)
@@ -105,7 +105,7 @@ def act3_oracle_sandwich(tab):
     src = TableCarbonSource(table=tab)
     arrive = UniformArrivals(M=5, amax=240)
     key = jax.random.PRNGKey(1)
-    la = LookaheadDPPPolicy(V=V, fast=True, H=H, discount=1.0,
+    la = LookaheadDPPPolicy(V=V, H=H, discount=1.0,
                             defer_weight=3.0)
     res = simulate(la, spec, src, arrive, T, key,
                    forecaster=ClairvoyantTableForecaster(H=H))

@@ -37,9 +37,8 @@ def main() -> None:
             res = jax.jit(lambda: simulate_fleet(pol, fleet, T, key))()
             return res
 
-        blind = run(StaticRoutePolicy(CarbonIntensityPolicy(V=V,
-                                                            fast=True)))
-        aware = run(NetworkAwareDPPPolicy(V=V, fast=True))
+        blind = run(StaticRoutePolicy(CarbonIntensityPolicy(V=V)))
+        aware = run(NetworkAwareDPPPolicy(V=V))
         em_b = np.asarray(blind.cum_emissions[:, -1])
         em_a = np.asarray(aware.cum_emissions[:, -1])
         red = 100.0 * (1.0 - em_a / em_b).mean()

@@ -1,8 +1,8 @@
 """Scheduling policies.
 
 * CarbonIntensityPolicy -- the paper's Algorithm 1 (drift-plus-penalty
-  greedy). Faithful semantics, expressed as a fixed-shape lax.scan over
-  sorted task types so it jits / vmaps / scans.
+  greedy). Faithful semantics, expressed through the chunked top_k
+  greedy fill so it jits / vmaps / scans at any M.
 * QueueLengthPolicy -- the paper's baseline: longest edge queue -> shortest
   cloud queue; clouds always process their longest queues; carbon-blind.
 * ExactDPPPolicy -- beyond-paper: solves the per-slot surrogate (19)
@@ -41,148 +41,142 @@ from repro.core.queueing import Action, NetworkSpec, NetworkState
 Array = jax.Array
 
 
-def _greedy_fill(
-    scores: Array,  # [M] per-unit-of-item score (negative == beneficial)
-    unit_energy: Array,  # [M] energy per item
-    max_items: Array,  # [M] cap per item (queue lengths)
-    budget: Array,  # scalar energy budget
-    stop_at_first_unfit: bool,
+def greedy_fill(
+    scores: Array,       # [M] or [B, M] per-item score (negative == take)
+    unit_energy: Array,  # [M] or [B, M] energy per item
+    max_items: Array,    # [M] or [B, M] cap per item (queue lengths)
+    budget: Array,       # scalar or [B] energy budget per lane
+    *,
+    stop_at_first_unfit: bool = True,
+    literal_edge_budget: bool = False,
+    sort_key: Array | None = None,
+    chunk: int = 64,
 ) -> Array:
-    """Greedy knapsack fill used by both halves of Algorithm 1.
+    """The repo's one greedy knapsack fill (Algorithm 1, both halves).
 
-    Scans item types in increasing order of scores/unit_energy, taking
-    min(max_items, floor(P/energy)) of every type whose score is negative,
-    decrementing the remaining budget. Returns the integer counts [M].
+    Semantics (per lane, items visited in increasing `sort_key` order,
+    ties broken by index -- `sort_key` defaults to scores/unit_energy):
+      fits = floor(P / e); take min(cap, fits) of every item whose score
+      is negative, decrementing P by take*e. `stop_at_first_unfit`
+      reproduces the pseudocode's `break` at the first fits == 0;
+      `literal_edge_budget` reproduces the printed edge line verbatim
+      (P -= fits*e, always stopping at the first unfit -- the variant
+      ignores `stop_at_first_unfit`, like the pseudocode it mirrors).
+
+    Implementation (§Perf-policy): only items with score < 0 can ever
+    take or stop the walk before the takes end -- with the default
+    ratio key they sort strictly before every non-negative item, so the
+    walk over non-negative items is a no-op tail. Each while_loop trip
+    pulls the `chunk` cheapest unprocessed negative-score items with
+    lax.top_k (ties resolve to the lowest index == the stable order)
+    and walks them with a lax.scan whose body is the sequential
+    reference op-for-op, so counts are bit-identical to a full
+    sequential pass by construction. The loop exits when a lane stops,
+    runs out of negative items, or P drops below the cheapest remaining
+    energy (nothing downstream can fit). One trip almost always
+    suffices: taking `chunk` items costs >= chunk * min_e energy.
+
+    Batched: stack lanes on a leading axis ([B, M] inputs, [B] budget)
+    and every trip issues ONE top_k / ONE scan for all lanes -- that is
+    how the policies fill the edge row and all N clouds per slot in a
+    single call. Callers passing `sort_key` must keep the contract that
+    negative-score items sort before non-negative ones (any key does
+    when negative items get negative keys, like -queue-length).
+
+    Caps are treated as integer-valued (queue lengths); the budget walk
+    takes cap items whenever floor(P/e) >= cap.
     """
-    ratio = scores / unit_energy
-    order = jnp.argsort(ratio)  # increasing: most beneficial first
-
-    def body(carry, idx):
-        P, stopped = carry
-        e = unit_energy[idx]
-        fits = jnp.floor(P / e)
-        can_take = (fits > 0) & (scores[idx] < 0) & (~stopped)
-        take = jnp.where(can_take, jnp.minimum(max_items[idx], fits), 0.0)
-        P = P - take * e
-        if stop_at_first_unfit:
-            stopped = stopped | (fits <= 0)
-        return (P, stopped), (idx, take)
-
-    (_, _), (idxs, takes) = jax.lax.scan(
-        body, (budget.astype(jnp.float32), jnp.asarray(False)), order
-    )
-    counts = jnp.zeros_like(scores).at[idxs].set(takes)
-    return counts
-
-
-def _greedy_fill_fast(
-    scores: Array,
-    unit_energy: Array,
-    max_items: Array,
-    budget: Array,
-    window: int = 64,  # kept for API compat; the tail loop is adaptive
-) -> Array:
-    """O(M log M) vectorized greedy (beyond-paper, §Perf iteration 4).
-
-    Observation: in sorted order, every item before the budget crossing is
-    taken at FULL cap (remaining >= cap_i*e_i implies floor(remaining/e_i)
-    >= cap_i), so phase 1 is one cumsum; only the short tail after the
-    crossing needs the sequential budget recursion. Phase 2 walks that
-    tail with a while_loop that exits on the faithful `break` (fits==0)
-    or exhaustion -- exact Algorithm-1 output by construction, and under
-    vmap the batched trip count is the MAX tail length across lanes
-    (typically <10 vs the baseline's full M sequential steps).
-    """
-    del window
-    M = scores.shape[0]
-    ratio = scores / unit_energy
-    order = jnp.argsort(ratio)
-    s = scores[order]
-    e = unit_energy[order]
-    cap = max_items[order]
-
-    want = jnp.where(s < 0, cap, 0.0)
-    cost = want * e
-    prefix = jnp.cumsum(cost) - cost  # energy spent BEFORE item i if all full
-    full = prefix + cost <= budget
-    take_full = jnp.where(full, want, 0.0)
-
-    all_full = jnp.all(full)
-    start = jnp.where(all_full, M, jnp.argmax(~full)).astype(jnp.int32)
-    # budget remaining when the sequential greedy reaches `start`: every
-    # item before it is provably taken at full want.
-    P0 = budget.astype(jnp.float32) - jnp.where(
-        all_full, jnp.sum(cost), prefix[jnp.clip(start, 0, M - 1)]
-    )
-    # suffix-min energy among still-takeable items: once P drops below it
-    # no later item takes anything, so exiting is output-equivalent even
-    # though the paper's loop would keep walking.
-    e_neg = jnp.where(s < 0, e, jnp.inf)
-    suff_min_e = jax.lax.cummin(e_neg[::-1])[::-1]
-    suff_min_e = jnp.concatenate([suff_min_e, jnp.array([jnp.inf])])
-
-    # Phase 2: walk the tail exactly like the reference. Items i>=start
-    # that phase 1 marked `full` are still taken at full want (remaining
-    # budget is only ever >= phase 1's assumption), so their take is
-    # already recorded -- but their energy and the break check still
-    # apply in program order.
-    def cond(carry):
-        P, i, stopped, take = carry
-        return (~stopped) & (i < M) & (
-            P >= suff_min_e[jnp.clip(i, 0, M)]
+    scores = jnp.asarray(scores)
+    single = scores.ndim == 1
+    if single:
+        scores = scores[None]
+        unit_energy = jnp.asarray(unit_energy)[None]
+        max_items = jnp.asarray(max_items)[None]
+        budget = jnp.reshape(jnp.asarray(budget), (1,))
+        if sort_key is not None:
+            sort_key = jnp.asarray(sort_key)[None]
+    B, M = scores.shape
+    if int(chunk) < 1:
+        raise ValueError(
+            f"chunk={chunk!r} must be >= 1 (a zero-size chunk would "
+            "loop forever processing nothing)"
         )
+    k = min(int(chunk), M)
+    stops = stop_at_first_unfit or literal_edge_budget
 
-    def body(carry):
-        P, i, stopped, take = carry
-        idx = jnp.clip(i, 0, M - 1)
-        fits = jnp.floor(P / e[idx])
-        stop_now = fits <= 0  # the paper's break (checked before taking)
-        t = jnp.where(
-            (~stop_now) & (s[idx] < 0), jnp.minimum(cap[idx], fits), 0.0
+    key = sort_key if sort_key is not None else scores / unit_energy
+    mkey0 = jnp.where(scores < 0, key, jnp.inf)
+    P0 = jnp.broadcast_to(jnp.asarray(budget, jnp.float32), (B,))
+
+    def active(P, stopped, mkey):
+        alive = jnp.isfinite(mkey)
+        min_e = jnp.min(
+            jnp.where(alive, unit_energy, jnp.inf), axis=-1
         )
-        new = jnp.where(full[idx], 0.0, t)  # full items already recorded
-        take = take.at[idx].add(jnp.where(stop_now, 0.0, new))
-        P = P - jnp.where(stop_now, 0.0, t) * e[idx]
-        return (P, i + 1, stop_now, take)
+        return (~stopped) & jnp.any(alive, axis=-1) & (P >= min_e)
 
-    _, _, _, take_sorted = jax.lax.while_loop(
-        cond, body, (P0, start, jnp.asarray(False), take_full)
-    )
-    return jnp.zeros_like(scores).at[order].set(take_sorted)
-
-
-def _literal_edge_fill(
-    scores: Array, unit_energy: Array, max_items: Array, budget: Array
-) -> Array:
-    """Edge fill following the printed pseudocode verbatim:
-    P <- P - floor(P/pe)*pe even when d was clipped by the queue."""
-    ratio = scores / unit_energy
-    order = jnp.argsort(ratio)
-
-    def body(carry, idx):
+    def step(carry, item):
         P, stopped = carry
-        e = unit_energy[idx]
-        fits = jnp.floor(P / e)
-        can_take = (fits > 0) & (scores[idx] < 0) & (~stopped)
-        take = jnp.where(can_take, jnp.minimum(max_items[idx], fits), 0.0)
-        P = jnp.where(can_take, P - fits * e, P)
-        stopped = stopped | (fits <= 0)
-        return (P, stopped), (idx, take)
+        e_j, s_j, cap_j, live_j = item
+        fits = jnp.floor(P / e_j)
+        live = live_j & (~stopped)
+        can = live & (fits > 0.0) & (s_j < 0)
+        t_j = jnp.where(can, jnp.minimum(cap_j, fits), 0.0)
+        if literal_edge_budget:
+            P = jnp.where(can, P - fits * e_j, P)
+        else:
+            P = P - t_j * e_j  # t_j == 0 is an exact no-op
+        if stops:
+            stopped = stopped | (live & (fits <= 0.0))
+        return (P, stopped), t_j
 
-    (_, _), (idxs, takes) = jax.lax.scan(
-        body, (budget.astype(jnp.float32), jnp.asarray(False)), order
+    def walk_chunk(P, stopped, mkey, gate):
+        neg, idx = jax.lax.top_k(-mkey, k)  # k smallest keys, stable
+        valid = jnp.isfinite(neg) & gate
+        e_s = jnp.take_along_axis(unit_energy, idx, axis=-1)
+        s_s = jnp.take_along_axis(scores, idx, axis=-1)
+        cap_s = jnp.take_along_axis(max_items, idx, axis=-1)
+        (P, stopped), takes = jax.lax.scan(
+            step, (P, stopped), (e_s.T, s_s.T, cap_s.T, valid.T)
+        )
+        return P, stopped, idx, takes.T
+
+    stopped0 = jnp.zeros((B,), bool)
+    if k == M:
+        # One trip provably covers every item: skip the while_loop and
+        # its exit bookkeeping entirely (the common small-M / fleet-lane
+        # case; per-slot cost matches the old argsort+scan fill).
+        _, _, idx, takes = walk_chunk(P0, stopped0, mkey0, True)
+        counts = jax.vmap(lambda t, i, v: t.at[i].add(v))(
+            jnp.zeros_like(scores), idx, takes
+        )
+        return counts[0] if single else counts
+
+    def trip(carry):
+        P, stopped, take, mkey, act = carry
+        P, stopped, idx, takes = walk_chunk(P, stopped, mkey, act[:, None])
+        take = jax.vmap(lambda t, i, v: t.at[i].add(v))(take, idx, takes)
+        done = jax.vmap(lambda m, i: m.at[i].set(jnp.inf))(mkey, idx)
+        mkey = jnp.where(act[:, None], done, mkey)
+        return P, stopped, take, mkey, active(P, stopped, mkey)
+
+    carry = jax.lax.while_loop(
+        lambda c: jnp.any(c[4]),
+        trip,
+        (P0, stopped0, jnp.zeros_like(scores), mkey0,
+         active(P0, stopped0, mkey0)),
     )
-    return jnp.zeros_like(scores).at[idxs].set(takes)
+    counts = carry[2]
+    return counts[0] if single else counts
 
 
 @dataclasses.dataclass(frozen=True)
 class CarbonIntensityPolicy:
     """Paper Algorithm 1: carbon-intensity based drift-plus-penalty greedy.
 
-    fast=True switches the greedy fill to the vectorized cumsum+window
-    formulation (identical output, ~25x per-slot latency at M>=2048; see
-    DESIGN.md §Perf-policy). Only valid with the faithful
-    stop_at_first_unfit semantics.
+    The edge dispatch row and all N cloud processing rows go through ONE
+    stacked `greedy_fill` call per slot (chunked top_k engine, see
+    DESIGN.md §Perf-policy); `fill_chunk` sizes the per-trip top_k.
 
     score_backend selects how the per-slot score pass (n1, b, c) is
     computed:
@@ -198,21 +192,39 @@ class CarbonIntensityPolicy:
     V: float = 0.05
     stop_at_first_unfit: bool = True
     literal_edge_budget: bool = False
-    fast: bool = False
-    fast_window: int = 64
+    fill_chunk: int = 64
     score_backend: str = "reference"
     score_block_m: int = 256
     score_block_n: int = 256
     score_interpret: bool | None = None
 
-    def _fill(self, scores, energy, caps, budget):
-        if self.fast and self.stop_at_first_unfit:
-            return _greedy_fill_fast(
-                scores, energy, caps, budget, self.fast_window
+    def _fill_all(self, b, c, pe, pc, Qe, Qc, Pe, Pc):
+        """Edge dispatch + N cloud fills as one stacked [N+1, M] greedy
+        fill (shared with NetworkAwareDPPPolicy, whose dispatch scores
+        differ but whose fill semantics are exactly Algorithm 1's).
+        Returns (d_counts [M], w [M, N])."""
+        if self.literal_edge_budget:
+            # The literal pseudocode variant only exists for the edge
+            # branch; clouds keep the corrected budget accounting.
+            d_counts = greedy_fill(
+                b, pe, Qe, Pe,
+                literal_edge_budget=True, chunk=self.fill_chunk,
             )
-        return _greedy_fill(
-            scores, energy, caps, budget, self.stop_at_first_unfit
+            w = greedy_fill(
+                c.T, pc.T, Qc.T, Pc,
+                stop_at_first_unfit=self.stop_at_first_unfit,
+                chunk=self.fill_chunk,
+            ).T
+            return d_counts, w
+        counts = greedy_fill(
+            jnp.concatenate([b[None, :], c.T], axis=0),
+            jnp.concatenate([pe[None, :], pc.T], axis=0),
+            jnp.concatenate([Qe[None, :], Qc.T], axis=0),
+            jnp.concatenate([jnp.reshape(Pe, (1,)), Pc], axis=0),
+            stop_at_first_unfit=self.stop_at_first_unfit,
+            chunk=self.fill_chunk,
         )
+        return counts[0], counts[1:].T
 
     def _scores(self, state, pe, pc, Ce, Cc, V):
         """Score pass: (c [M,N], n1 [M], b [M]) via the selected backend."""
@@ -251,29 +263,11 @@ class CarbonIntensityPolicy:
         V = jnp.asarray(self.V, jnp.float32)
 
         c, n1, b = self._scores(state, pe, pc, Ce, Cc, V)
-
-        # --- Edge: dispatch each type to its emptiest cloud queue. -------
-        if self.literal_edge_budget:
-            d_counts = _literal_edge_fill(b, pe, state.Qe, Pe)
-        else:
-            d_counts = self._fill(b, pe, state.Qe, Pe)
-        d = jnp.zeros_like(state.Qc).at[jnp.arange(spec.M), n1].set(d_counts)
-
-        # --- Clouds: process most-backlogged-per-energy types. -----------
-        w = self._cloud_fill(c, pc, state.Qc, Pc)
-        return Action(d=d, w=w)
-
-    def _cloud_fill(self, c, pc, Qc, Pc):
-        """Per-cloud greedy processing fill on the c-score matrix
-        (shared with NetworkAwareDPPPolicy, whose dispatch half differs
-        but whose processing half is exactly Algorithm 1's)."""
-
-        def per_cloud(c_n, pc_n, Qc_n, Pc_n):
-            return self._fill(c_n, pc_n, Qc_n, Pc_n)
-
-        return jax.vmap(per_cloud, in_axes=(1, 1, 1, 0), out_axes=1)(
-            c, pc, Qc, Pc
+        d_counts, w = self._fill_all(
+            b, c, pe, pc, state.Qe, state.Qc, Pe, Pc
         )
+        d = jnp.zeros_like(state.Qc).at[jnp.arange(spec.M), n1].set(d_counts)
+        return Action(d=d, w=w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -347,8 +341,12 @@ class QueueLengthPolicy:
 
     Edge: longest edge queues dispatch first, each type to its shortest
     cloud queue, as many as energy allows. Clouds: longest cloud queues
-    process first, as many as energy allows.
+    process first, as many as energy allows. Same stacked greedy_fill
+    engine as Algorithm 1, ordered by -queue-length (sort_key) instead
+    of score-per-energy, never stopping at an unfit type.
     """
+
+    fill_chunk: int = 64
 
     def __call__(
         self,
@@ -363,39 +361,26 @@ class QueueLengthPolicy:
         pe, pc, Pe, Pc = spec.as_arrays()
         n1 = jnp.argmin(state.Qc, axis=1)
 
-        # Longest-queue-first: order by -Q (only types with waiting tasks),
-        # take as many as the remaining energy allows.
-        order_scores = jnp.where(state.Qe > 0, -state.Qe, 1.0)
-
-        def edge_fill(scores, energy, caps, budget):
-            order = jnp.argsort(scores)
-
-            def body(P, idx):
-                e = energy[idx]
-                fits = jnp.floor(P / e)
-                take = jnp.where(
-                    (scores[idx] < 0) & (fits > 0),
-                    jnp.minimum(caps[idx], fits),
-                    0.0,
-                )
-                return P - take * e, (idx, take)
-
-            _, (idxs, takes) = jax.lax.scan(
-                body, budget.astype(jnp.float32), order
-            )
-            return jnp.zeros_like(scores).at[idxs].set(takes)
-
-        d_counts = edge_fill(order_scores, pe, state.Qe, Pe)
-        d = jnp.zeros_like(state.Qc).at[jnp.arange(spec.M), n1].set(d_counts)
-
-        def per_cloud(Qc_n, pc_n, Pc_n):
-            scores = jnp.where(Qc_n > 0, -Qc_n, 1.0)
-            return edge_fill(scores, pc_n, Qc_n, Pc_n)
-
-        w = jax.vmap(per_cloud, in_axes=(1, 1, 0), out_axes=1)(
-            state.Qc, pc, Pc
+        # Longest-queue-first: order by -Q (only types with waiting
+        # tasks), take as many as the remaining energy allows.
+        scores = jnp.concatenate(
+            [
+                jnp.where(state.Qe > 0, -state.Qe, 1.0)[None, :],
+                jnp.where(state.Qc > 0, -state.Qc, 1.0).T,
+            ],
+            axis=0,
         )
-        return Action(d=d, w=w)
+        counts = greedy_fill(
+            scores,
+            jnp.concatenate([pe[None, :], pc.T], axis=0),
+            jnp.concatenate([state.Qe[None, :], state.Qc.T], axis=0),
+            jnp.concatenate([jnp.reshape(Pe, (1,)), Pc], axis=0),
+            stop_at_first_unfit=False,
+            sort_key=scores,
+            chunk=self.fill_chunk,
+        )
+        d = jnp.zeros_like(state.Qc).at[jnp.arange(spec.M), n1].set(counts[0])
+        return Action(d=d, w=counts[1:].T)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -470,9 +455,15 @@ class ExactDPPPolicy:
         return Action(d=d, w=w)
 
 
-def literal_algorithm1(state, spec, Ce, Cc, V, stop_at_first_unfit=True):
+def literal_algorithm1(
+    state, spec, Ce, Cc, V,
+    stop_at_first_unfit=True, literal_edge_budget=False,
+):
     """Pure-Python transcription of Algorithm 1 (numpy, data-dependent
-    control flow). Oracle for tests: the vectorized policy must match."""
+    control flow). Oracle for tests: the vectorized policy must match.
+    `literal_edge_budget=True` reproduces the printed edge line
+    (`P <- P - floor(P/pe)*pe`, always breaking at the first unfit),
+    mirroring CarbonIntensityPolicy's flag of the same name."""
     import numpy as np
 
     pe = np.asarray(spec.pe, np.float64)
@@ -492,13 +483,13 @@ def literal_algorithm1(state, spec, Ce, Cc, V, stop_at_first_unfit=True):
     for m in order:
         fits = np.floor(P / pe[m])
         if fits <= 0:
-            if stop_at_first_unfit:
+            if stop_at_first_unfit or literal_edge_budget:
                 break
             continue
         if b[m] < 0:
             take = min(Qe[m], fits)
             d[m, n1[m]] = take
-            P -= take * pe[m]
+            P -= (fits if literal_edge_budget else take) * pe[m]
 
     for n in range(N):
         c = V * Cc[n] * pc[:, n] - Qc[:, n]

@@ -86,16 +86,73 @@ def init_forecaster_carry(forecaster, N, key, carbon_source, error_params):
 class SimResult(NamedTuple):
     emissions: Array      # [T] per-slot carbon emissions C(t)
     cum_emissions: Array  # [T] cumulative sum
-    Qe: Array             # [T, M] edge queue trajectory (post-step)
-    Qc: Array             # [T, M, N] cloud queue trajectory (post-step)
+    Qe: Array             # [R, M] edge queue trajectory (post-step)
+    Qc: Array             # [R, M, N] cloud queue trajectory (post-step)
     dispatched: Array     # [T] total tasks dispatched
     processed: Array      # [T] total tasks processed
     energy_edge: Array    # [T] edge energy spent
     energy_cloud: Array   # [T, N] cloud energy spent
 
+    # R depends on the `record` mode: T for "full" (every slot), 1 for
+    # "summary" (final state only), T//k for stride k (state at the end
+    # of every k-th slot). Scalar series always cover all T slots, and
+    # Qe[-1]/Qc[-1] is the final state in every mode.
+
     @property
     def final_backlog(self) -> Array:
         return self.Qe[-1].sum() + self.Qc[-1].sum()
+
+
+def _record_scan(body, state_of, carry0, T, record):
+    """Shared scan driver for the recording modes.
+
+    `body(carry, t) -> (carry, scalars)` runs one slot and emits the
+    per-slot scalar tuple; `state_of(carry)` extracts the (large) queue
+    trajectories to record. Modes:
+
+    * "full"    -- one scan, states recorded every slot ([T, ...]).
+    * "summary" -- one scan, scalars only; the final state is recorded
+      once ([1, ...]), so device memory stops scaling as O(T * state).
+    * stride k  -- scan of scans: the inner scan covers k slots of
+      scalars, the outer scan snapshots the post-step state once per
+      chunk ([T//k, ...] -- the rows "full" records at slots k-1,
+      2k-1, ...). Requires k to divide T.
+
+    Per-slot scalar ops are identical in every mode (same `body`), so
+    the scalar series agree bitwise across modes; only the recorded
+    queue trajectories differ in length.
+    """
+    if record == "full":
+        def with_state(carry, t):
+            carry, scalars = body(carry, t)
+            return carry, (scalars, state_of(carry))
+
+        carry, (scalars, states) = jax.lax.scan(
+            with_state, carry0, jnp.arange(T)
+        )
+        return scalars, states
+    if record == "summary":
+        carry, scalars = jax.lax.scan(body, carry0, jnp.arange(T))
+        states = jax.tree.map(lambda x: x[None], state_of(carry))
+        return scalars, states
+    if not isinstance(record, int) or record <= 0 or T % record != 0:
+        raise ValueError(
+            f"record={record!r} must be 'full', 'summary', or a positive "
+            f"int stride dividing T={T}"
+        )
+    k = record
+
+    def chunk(carry, ts):
+        carry, scalars = jax.lax.scan(body, carry, ts)
+        return carry, (scalars, state_of(carry))
+
+    carry, (scalars, states) = jax.lax.scan(
+        chunk, carry0, jnp.arange(T).reshape(T // k, k)
+    )
+    scalars = jax.tree.map(
+        lambda x: x.reshape((T,) + x.shape[2:]), scalars
+    )
+    return scalars, states
 
 
 def simulate(
@@ -109,8 +166,17 @@ def simulate(
     forecaster: Callable | None = None,
     graph=None,
     error_params=None,
+    record: str | int = "full",
 ) -> SimResult:
     """Runs the network for T slots under `policy`.
+
+    `record` controls how much trajectory the result carries: "full"
+    (default) stacks the post-step queues every slot; "summary" keeps
+    only the final state (Qe/Qc come back with a length-1 leading axis,
+    so `Qe[-1]` and `final_backlog` work unchanged); an int stride k
+    snapshots the state every k-th slot ([T//k, ...]). The per-slot
+    scalar series (emissions/dispatched/processed/energy) cover all T
+    slots bitwise identically in every mode -- see `_record_scan`.
 
     When `forecaster` is given (see repro.forecast), its carry threads
     through the scan next to the queue state: every slot the observed
@@ -142,7 +208,7 @@ def simulate(
         return simulate_network(
             policy, spec, graph, carbon_source, arrival_source, T, key,
             state0=state0, forecaster=forecaster,
-            error_params=error_params,
+            error_params=error_params, record=record,
         )
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
@@ -173,8 +239,6 @@ def simulate(
         nxt = step(state, act, a)
         out = (
             C_t,
-            nxt.Qe,
-            nxt.Qc,
             jnp.sum(act.d),
             jnp.sum(act.w),
             jnp.sum(act.d * pe[:, None]),
@@ -183,8 +247,8 @@ def simulate(
         return (nxt, fcarry), out
 
     carry0 = (state0, fcarry0 if forecaster is not None else ())
-    (_, _), (C, Qe, Qc, disp, proc, ee, ec) = jax.lax.scan(
-        body, carry0, jnp.arange(T)
+    (C, disp, proc, ee, ec), (Qe, Qc) = _record_scan(
+        body, lambda carry: (carry[0].Qe, carry[0].Qc), carry0, T, record
     )
     return SimResult(
         emissions=C,
@@ -316,6 +380,7 @@ def simulate_fleet(
     T: int,
     key: Array,
     forecaster: Callable | None = None,
+    record: str | int = "full",
 ) -> SimResult:
     """Runs F independent network instances for T slots in ONE compiled
     call: the full `simulate` scan is vmapped over the stacked
@@ -327,6 +392,11 @@ def simulate_fleet(
     a NetSimResult when the fleet carries a stacked LinkGraph.
     Instance f draws its own arrival/policy randomness from
     `jax.random.split(key, F)[f]`.
+
+    `record` threads through to every lane's `simulate`: full-recording
+    fleet memory scales as O(F * T * M * N); `record="summary"` keeps
+    only per-slot scalars plus the final state ([F, 1, M] / [F, 1, M, N])
+    -- the mode that unlocks F >= 512 lanes in one compiled call.
     """
     F = fleet.F
     M = fleet.arrival_amax.shape[1]
@@ -346,6 +416,7 @@ def simulate_fleet(
         return simulate(
             policy, spec, carbon_source, arrival_source, T, k,
             forecaster=forecaster, graph=graph, error_params=err,
+            record=record,
         )
 
     err = (

@@ -35,7 +35,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies import LookaheadDPPPolicy, _literal_edge_fill
+from repro.core.policies import LookaheadDPPPolicy
 from repro.core.queueing import NetworkSpec, NetworkState
 from repro.network.graph import LinkGraph
 from repro.network.transfer import NetAction
@@ -112,18 +112,16 @@ class NetworkAwareDPPPolicy(LookaheadDPPPolicy):
         pe, pc, Pe, Pc = spec.as_arrays()
         V = jnp.asarray(self.V, jnp.float32)
 
-        # Cloud half: unchanged Algorithm 1 (the c-matrix and fill).
+        # Cloud half: unchanged Algorithm 1 (the c-matrix). Edge half:
+        # dispatch each type onto its best route. Both fills run as the
+        # parent's one stacked [N+1, M] greedy_fill call.
         c, _, _ = self._scores(state, pe, pc, Ce_eff, Cc_eff, V)
-        w = self._cloud_fill(c, pc, state.Qc, Pc)
-
-        # Edge half: dispatch each type onto its best route.
         _, l1, b = self._route_scores(
             state, Qt, graph, pe, pc, Ce_eff, Cc_eff, V
         )
-        if self.literal_edge_budget:
-            d_counts = _literal_edge_fill(b, pe, state.Qe, Pe)
-        else:
-            d_counts = self._fill(b, pe, state.Qe, Pe)
+        d_counts, w = self._fill_all(
+            b, c, pe, pc, state.Qe, state.Qc, Pe, Pc
+        )
         dt = jnp.zeros_like(Qt).at[jnp.arange(spec.M), l1].set(d_counts)
         return NetAction(dt=dt, w=w)
 

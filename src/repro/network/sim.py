@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.queueing import NetworkState, NetworkSpec, init_state
-from repro.core.simulator import init_forecaster_carry
+from repro.core.simulator import _record_scan, init_forecaster_carry
 from repro.network.graph import LinkGraph
 from repro.network.transfer import (
     LinkState,
@@ -45,15 +45,18 @@ Array = jax.Array
 class NetSimResult(NamedTuple):
     emissions: Array        # [T] per-slot end-to-end carbon
     cum_emissions: Array    # [T] cumulative sum
-    Qe: Array               # [T, M] edge queues (post-step)
-    Qc: Array               # [T, M, N] cloud queues (post-step)
-    Qt: Array               # [T, M, L] in-flight transfers (post-step)
+    Qe: Array               # [R, M] edge queues (post-step)
+    Qc: Array               # [R, M, N] cloud queues (post-step)
+    Qt: Array               # [R, M, L] in-flight transfers (post-step)
     dispatched: Array       # [T] tasks put onto links
     delivered: Array        # [T] tasks landed in cloud queues
     processed: Array        # [T] tasks processed
     energy_edge: Array      # [T] edge dispatch energy
     energy_transfer: Array  # [T] WAN transfer energy
     energy_cloud: Array     # [T, N] cloud compute energy
+
+    # R depends on the `record` mode exactly as in SimResult: T for
+    # "full", 1 for "summary", T//k for stride k.
 
     @property
     def final_backlog(self) -> Array:
@@ -73,6 +76,7 @@ def simulate_network(
     state0: NetworkState | None = None,
     forecaster: Callable | None = None,
     error_params=None,
+    record: str | int = "full",
 ) -> NetSimResult:
     """Runs the network + WAN for T slots under a route-aware policy.
 
@@ -81,7 +85,9 @@ def simulate_network(
     scan, `error_params = (bias, noise)` overrides the forecaster's
     ForecastErrorModel per call (that is how `simulate_fleet` sweeps
     forecast quality across lanes), and emissions are always accounted
-    against the TRUE intensities.
+    against the TRUE intensities. `record` controls the Qe/Qc/Qt
+    trajectory length exactly as in `simulate` ("full" | "summary" |
+    int stride); scalar series always cover all T slots.
     """
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
@@ -121,9 +127,6 @@ def simulate_network(
         )
         out = (
             C_t,
-            nxt.Qe,
-            nxt.Qc,
-            ls_next.Qt,
             jnp.sum(act.dt),
             jnp.sum(delivered),
             jnp.sum(act.w),
@@ -134,8 +137,9 @@ def simulate_network(
         return (nxt, ls_next, fcarry), out
 
     carry0 = (state0, ls0, fcarry0 if forecaster is not None else ())
-    _, (C, Qe, Qc, Qt, disp, deliv, proc, ee, et, ec) = jax.lax.scan(
-        body, carry0, jnp.arange(T)
+    (C, disp, deliv, proc, ee, et, ec), (Qe, Qc, Qt) = _record_scan(
+        body, lambda carry: (carry[0].Qe, carry[0].Qc, carry[1].Qt),
+        carry0, T, record,
     )
     return NetSimResult(
         emissions=C,

@@ -125,7 +125,7 @@ def test_oracle_horizon_monotone_in_H_and_lower_bounds_every_policy():
     horizons = [1, 2, 3, 4, 6, 8, 12, 16, 24, None]
     for pol in (
         CarbonIntensityPolicy(V=0.05),
-        CarbonIntensityPolicy(V=0.2, fast=True),
+        CarbonIntensityPolicy(V=0.2),
         QueueLengthPolicy(),
         ThresholdPolicy(threshold=250.0),
     ):

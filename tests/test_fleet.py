@@ -94,6 +94,32 @@ def test_build_fleet_unknown_name():
         build_fleet(["no-such-scenario"], per_kind=1)
 
 
+def test_fleet_record_summary_matches_full():
+    """One compiled call, F lanes, record="summary": scalar series
+    bitwise equal to full recording, Qe/Qc collapse to [F, 1, ...]."""
+    fleet = build_fleet(["diurnal", "bursty"], per_kind=3, Tc=48, seed=5)
+    T, key = 40, jax.random.PRNGKey(11)
+    pol = CarbonIntensityPolicy(V=0.05)
+    full = simulate_fleet(pol, fleet, T, key)
+    summ = jax.jit(lambda k: simulate_fleet(
+        pol, fleet, T, k, record="summary"
+    ))(key)
+    for name in ("emissions", "cum_emissions", "dispatched", "processed",
+                 "energy_edge", "energy_cloud"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full, name)), np.asarray(getattr(summ, name)),
+            err_msg=name,
+        )
+    M = fleet.arrival_amax.shape[1]
+    assert summ.Qe.shape == (fleet.F, 1, M)
+    np.testing.assert_array_equal(
+        np.asarray(full.Qe[:, -1]), np.asarray(summ.Qe[:, 0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(full.Qc[:, -1]), np.asarray(summ.Qc[:, 0])
+    )
+
+
 def test_fleet_carbon_policy_beats_queue_policy_on_average():
     """The paper's headline holds across a heterogeneous fleet: averaged
     over scenarios, the carbon-aware policy emits less than the

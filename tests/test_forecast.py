@@ -268,9 +268,9 @@ def test_lookahead_reduces_emissions_on_diurnal_fleet():
         bl = np.asarray(res.Qe[:, -1].sum(-1) + res.Qc[:, -1].sum((-2, -1)))
         return em, bl
 
-    em0, bl0 = run(CarbonIntensityPolicy(V=0.2, fast=True))
+    em0, bl0 = run(CarbonIntensityPolicy(V=0.2))
     em1, bl1 = run(
-        LookaheadDPPPolicy(V=0.2, fast=True, H=8, discount=1.0,
+        LookaheadDPPPolicy(V=0.2, H=8, discount=1.0,
                            defer_weight=3.0),
         ClairvoyantTableForecaster(H=8),
     )
@@ -344,7 +344,7 @@ def test_per_lane_forecast_error_sweep_in_one_call():
     fleet_err = sweep_forecast_errors(fleet, bias=0.0, noise=noises)
     assert fleet_err.err_bias.shape == (4,)  # scalar bias broadcast
 
-    pol = LookaheadDPPPolicy(V=0.2, fast=True, H=8, discount=0.98,
+    pol = LookaheadDPPPolicy(V=0.2, H=8, discount=0.98,
                              defer_weight=2.0)
     fc = ClairvoyantTableForecaster(H=8)
     key = jax.random.PRNGKey(3)
@@ -379,7 +379,7 @@ def test_per_lane_bias_shifts_deferral():
     fleet_err = sweep_forecast_errors(
         fleet, bias=jnp.asarray([0.0, -0.5]), noise=0.0
     )
-    pol = LookaheadDPPPolicy(V=0.2, fast=True, H=8, discount=1.0,
+    pol = LookaheadDPPPolicy(V=0.2, H=8, discount=1.0,
                              defer_weight=3.0)
     res = simulate_fleet(
         pol, fleet_err, 72, jax.random.PRNGKey(0),

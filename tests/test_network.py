@@ -53,8 +53,8 @@ def _random_instance(rng, M, N):
 
 
 @pytest.mark.parametrize("backend", ["reference", "pallas"])
-@pytest.mark.parametrize("fast", [False, True])
-def test_degenerate_graph_policy_bit_parity(backend, fast):
+@pytest.mark.parametrize("chunk", [8, 512])
+def test_degenerate_graph_policy_bit_parity(backend, chunk):
     """On direct_graph (one infinite-bandwidth, zero-transfer-carbon
     link per cloud) NetworkAwareDPPPolicy's actions are BIT-IDENTICAL
     to CarbonIntensityPolicy's on both score backends -- the
@@ -68,11 +68,11 @@ def test_degenerate_graph_policy_bit_parity(backend, fast):
         # (emulated) kernels on CPU; the reference backend ignores it.
         interp = True if backend == "pallas" else None
         base = CarbonIntensityPolicy(
-            V=0.05, fast=fast, score_backend=backend,
+            V=0.05, fill_chunk=chunk, score_backend=backend,
             score_interpret=interp,
         )
         net = NetworkAwareDPPPolicy(
-            V=0.05, fast=fast, score_backend=backend,
+            V=0.05, fill_chunk=chunk, score_backend=backend,
             score_interpret=interp,
         )
         a = jax.jit(lambda s: base(s, spec, Ce, Cc, None, None))(state)
@@ -261,7 +261,7 @@ def test_full_simulation_conserves_tasks():
     and cloud queues only ever receive delivered tasks."""
     fleet = build_network_fleet(["congested-uplink"], per_kind=2, Tc=48)
     res = simulate_fleet(
-        NetworkAwareDPPPolicy(V=0.1, fast=True), fleet, 60,
+        NetworkAwareDPPPolicy(V=0.1), fleet, 60,
         jax.random.PRNGKey(1),
     )
     disp = np.asarray(res.dispatched).sum(axis=1)
@@ -311,6 +311,30 @@ def test_fleet_vmap_shape_dtype_contracts():
     assert len(np.unique(np.asarray(res.cum_emissions[:, -1]))) > 1
 
 
+def test_network_record_summary_matches_full():
+    """record="summary" through the WAN simulator: scalar series
+    bitwise, Qt/Qe/Qc collapse to length-1 final-state trajectories."""
+    fleet = build_network_fleet(["congested-uplink"], per_kind=2, Tc=48)
+    T, key = 30, jax.random.PRNGKey(4)
+    pol = NetworkAwareDPPPolicy(V=0.1)
+    full = simulate_fleet(pol, fleet, T, key)
+    summ = simulate_fleet(pol, fleet, T, key, record="summary")
+    for name in ("emissions", "cum_emissions", "dispatched", "delivered",
+                 "processed", "energy_edge", "energy_transfer",
+                 "energy_cloud"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full, name)), np.asarray(getattr(summ, name)),
+            err_msg=name,
+        )
+    assert summ.Qt.shape[1] == 1
+    np.testing.assert_array_equal(
+        np.asarray(full.Qt[:, -1]), np.asarray(summ.Qt[:, 0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(full.Qc[:, -1]), np.asarray(summ.Qc[:, 0])
+    )
+
+
 def test_star_topology_runs():
     fleet = build_network_fleet(["star"], per_kind=2, Tc=24)
     res = simulate_fleet(
@@ -350,11 +374,11 @@ def test_route_aware_beats_transfer_blind_on_congested_uplink():
                                 seed=0)
     T, key = 120, jax.random.PRNGKey(0)
     blind = simulate_fleet(
-        StaticRoutePolicy(CarbonIntensityPolicy(V=0.1, fast=True)),
+        StaticRoutePolicy(CarbonIntensityPolicy(V=0.1)),
         fleet, T, key,
     )
     aware = simulate_fleet(
-        NetworkAwareDPPPolicy(V=0.1, fast=True), fleet, T, key,
+        NetworkAwareDPPPolicy(V=0.1), fleet, T, key,
     )
     em_blind = float(blind.cum_emissions[:, -1].mean())
     em_aware = float(aware.cum_emissions[:, -1].mean())

@@ -1,16 +1,9 @@
 """Policy tests: Algorithm-1 faithfulness, feasibility properties,
 optimality gap vs the exact knapsack oracle."""
-import pytest
-
-pytest.importorskip("hypothesis")  # optional test dep: degrade to skips
-
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis.extra import numpy as hnp
 
 from repro.core import dpp
 from repro.core.policies import (

@@ -39,17 +39,17 @@ def _random_instance(rng, M, N):
         (300, 200, 128, 64),
     ],
 )
-@pytest.mark.parametrize("fast", [False, True])
-def test_pallas_backend_actions_bit_identical(M, N, bm, bn, fast):
+@pytest.mark.parametrize("chunk", [8, 512])
+def test_pallas_backend_actions_bit_identical(M, N, bm, bn, chunk):
     rng = np.random.default_rng(M * 1000 + N)
     for trial in range(3):
         spec, state, Ce, Cc = _random_instance(rng, M, N)
-        ref = CarbonIntensityPolicy(V=0.05, fast=fast)
+        ref = CarbonIntensityPolicy(V=0.05, fill_chunk=chunk)
         # score_interpret=True forces the real (emulated) kernel on CPU;
         # the default None auto-dispatches to the reference off-TPU
         # (covered by test_auto_dispatch_matches_reference).
         pal = CarbonIntensityPolicy(
-            V=0.05, fast=fast, score_backend="pallas",
+            V=0.05, fill_chunk=chunk, score_backend="pallas",
             score_block_m=bm, score_block_n=bn, score_interpret=True,
         )
         a_ref = jax.jit(lambda s: ref(s, spec, Ce, Cc, None, None))(state)

@@ -104,6 +104,71 @@ def test_vsweep_tradeoff_monotone():
     assert qe_mean[0] < qe_mean[2]
 
 
+def test_record_summary_matches_full_bitwise():
+    """record="summary" keeps the per-slot scalar series bitwise equal
+    to full recording and returns the final state as a length-1
+    trajectory (so Qe[-1]/final_backlog work unchanged)."""
+    spec = paper_spec()
+    key = jax.random.PRNGKey(3)
+    args = (
+        CarbonIntensityPolicy(V=0.05), spec, RandomCarbonSource(N=5),
+        UniformArrivals(M=5, amax=400), 120, key,
+    )
+    full = simulate(*args)
+    summ = simulate(*args, record="summary")
+    for name in ("emissions", "cum_emissions", "dispatched", "processed",
+                 "energy_edge", "energy_cloud"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full, name)), np.asarray(getattr(summ, name)),
+            err_msg=name,
+        )
+    assert summ.Qe.shape == (1, 5)
+    assert summ.Qc.shape == (1, 5, 5)
+    np.testing.assert_array_equal(np.asarray(full.Qe[-1]),
+                                  np.asarray(summ.Qe[0]))
+    np.testing.assert_array_equal(np.asarray(full.Qc[-1]),
+                                  np.asarray(summ.Qc[0]))
+    np.testing.assert_array_equal(np.asarray(full.final_backlog),
+                                  np.asarray(summ.final_backlog))
+
+
+def test_record_stride_snapshots_every_k_slots():
+    """record=k snapshots the post-step state at slots k-1, 2k-1, ...
+    (exactly the rows full recording stacks there) and keeps the scalar
+    series identical."""
+    spec = paper_spec()
+    key = jax.random.PRNGKey(4)
+    args = (
+        CarbonIntensityPolicy(V=0.05), spec, RandomCarbonSource(N=5),
+        UniformArrivals(M=5, amax=400), 120, key,
+    )
+    full = simulate(*args)
+    k = 8
+    strided = simulate(*args, record=k)
+    assert strided.Qe.shape == (120 // k, 5)
+    np.testing.assert_array_equal(
+        np.asarray(full.Qe[k - 1 :: k]), np.asarray(strided.Qe)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(full.Qc[k - 1 :: k]), np.asarray(strided.Qc)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(full.emissions), np.asarray(strided.emissions)
+    )
+
+
+def test_record_rejects_bad_stride():
+    spec = paper_spec()
+    args = (
+        CarbonIntensityPolicy(V=0.05), spec, RandomCarbonSource(N=5),
+        UniformArrivals(M=5, amax=400), 100, jax.random.PRNGKey(0),
+    )
+    with pytest.raises(ValueError, match="record"):
+        simulate(*args, record=7)  # 7 does not divide 100
+    with pytest.raises(ValueError, match="record"):
+        simulate(*args, record=0)
+
+
 def test_simulation_deterministic_given_key():
     spec = paper_spec()
     args = (
