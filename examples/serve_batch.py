@@ -6,7 +6,6 @@ are deferred -- up to an SLA bound -- when it is high: the paper's
     PYTHONPATH=src python examples/serve_batch.py
 """
 import os
-import time
 
 import jax
 

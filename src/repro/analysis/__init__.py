@@ -1,0 +1,49 @@
+"""Static-analysis layer: jaxpr invariant auditor + repo-specific lint.
+
+The repo's standing invariants (pallas-vs-reference bit-parity,
+float32 discipline in every scan carry, one compilation per
+(policy, backend) shape class) are enforced dynamically by tests --
+which can silently stop running (PR 5 found a whole module skipped for
+years behind a vestigial importorskip). This package enforces them
+*statically*, before anything executes:
+
+  * ``analysis.audit``    -- traces every registered
+    (policy x backend x scenario) combination with ``jax.make_jaxpr``
+    and checks dtype discipline, scan-carry stability, the absence of
+    host callbacks in jitted paths, and that each (policy, backend)
+    presents exactly one abstract signature per shape class across the
+    scenario registry (the retrace audit).
+  * ``analysis.sanitize`` -- lifts the simulators through
+    ``jax.experimental.checkify`` (NaN / div-by-zero / OOB index) and
+    runs a CI smoke battery.
+  * ``analysis.lint``     -- stdlib-``ast`` lint with repo-specific
+    rules (host casts on traced values, Python ``for`` over jnp arrays,
+    direct ``pltpu`` imports bypassing ``kernels/compat.py``, ``np.``
+    inside scan bodies, mutable default args, unused imports).
+
+CLI: ``python -m repro.analysis [--lint] [--audit] [--sanitize-smoke]``
+exits nonzero on any violation not recorded in ``baseline.json``.
+See DESIGN.md §Static analysis.
+"""
+from repro.analysis.audit import (
+    AuditViolation,
+    audit_all,
+    audit_combo,
+    iter_combos,
+    retrace_audit,
+)
+from repro.analysis.lint import LintViolation, lint_paths, lint_repo
+from repro.analysis.sanitize import checkified_simulate_fleet, sanitize_smoke
+
+__all__ = [
+    "AuditViolation",
+    "audit_all",
+    "audit_combo",
+    "iter_combos",
+    "retrace_audit",
+    "LintViolation",
+    "lint_paths",
+    "lint_repo",
+    "checkified_simulate_fleet",
+    "sanitize_smoke",
+]

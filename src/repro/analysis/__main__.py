@@ -1,0 +1,135 @@
+"""CLI: ``python -m repro.analysis [--lint] [--audit] [--sanitize-smoke]``.
+
+With no mode flags all three run. Positional paths switch to
+lint-only mode over exactly those files/directories with EVERY rule
+active (that is how the seeded-violation fixtures are checked:
+``python -m repro.analysis tests/fixtures/lint/bad_mutable_default.py``
+must exit nonzero).
+
+Violations are compared against ``analysis/baseline.json``: a finding
+whose ``path::rule`` count exceeds the baselined count fails the run,
+so pre-existing accepted findings never block a merge while any NEW
+one does. ``--write-baseline`` regenerates the file from the current
+tree (review the diff before committing it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+from pathlib import Path
+
+from repro.analysis.lint import lint_paths, lint_repo
+
+BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def _load_baseline(path: Path) -> dict:
+    if not path.exists():
+        return {"lint": {}, "audit": {}}
+    return json.loads(path.read_text())
+
+
+def _diff_vs_baseline(kind: str, keys, baseline: dict) -> list:
+    """Returns the findings in excess of the baselined counts."""
+    counts = Counter(keys)
+    allowed = Counter(baseline.get(kind, {}))
+    fresh = []
+    for key, n in sorted(counts.items()):
+        if n > allowed.get(key, 0):
+            fresh.append((key, n, allowed.get(key, 0)))
+    return fresh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("paths", nargs="*",
+                    help="lint exactly these files/dirs (all rules)")
+    ap.add_argument("--lint", action="store_true")
+    ap.add_argument("--audit", action="store_true")
+    ap.add_argument("--trace-all", action="store_true",
+                    help="audit: trace every registry combo instead of "
+                         "one representative per shape class")
+    ap.add_argument("--sanitize-smoke", action="store_true")
+    ap.add_argument("--baseline", type=Path, default=BASELINE)
+    ap.add_argument("--write-baseline", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.paths:
+        violations = lint_paths(args.paths)
+        for v in violations:
+            print(v)
+        print(f"# lint: {len(violations)} violation(s) in "
+              f"{len(args.paths)} path(s)")
+        return 1 if violations else 0
+
+    run_all = not (args.lint or args.audit or args.sanitize_smoke)
+    baseline = _load_baseline(args.baseline)
+    failed = False
+    new_baseline = {"lint": {}, "audit": {}}
+
+    if args.lint or run_all:
+        violations = lint_repo()
+        new_baseline["lint"] = dict(
+            Counter(v.key for v in violations)
+        )
+        fresh = _diff_vs_baseline(
+            "lint", (v.key for v in violations), baseline
+        )
+        for v in violations:
+            print(v)
+        if fresh:
+            failed = True
+            for key, n, allowed in fresh:
+                print(f"# NEW lint violation {key}: {n} > baseline "
+                      f"{allowed}", file=sys.stderr)
+        print(f"# lint: {len(violations)} finding(s), "
+              f"{len(fresh)} beyond baseline")
+
+    if args.audit or run_all:
+        from repro.analysis.audit import audit_all
+
+        violations = audit_all(trace_all=args.trace_all)
+        new_baseline["audit"] = dict(
+            Counter(f"{v.combo}::{v.check}" for v in violations)
+        )
+        fresh = _diff_vs_baseline(
+            "audit",
+            (f"{v.combo}::{v.check}" for v in violations), baseline,
+        )
+        for v in violations:
+            print(v)
+        if fresh:
+            failed = True
+            for key, n, allowed in fresh:
+                print(f"# NEW audit violation {key}: {n} > baseline "
+                      f"{allowed}", file=sys.stderr)
+        print(f"# audit: {len(violations)} finding(s), "
+              f"{len(fresh)} beyond baseline")
+
+    if args.sanitize_smoke or run_all:
+        from repro.analysis.sanitize import sanitize_smoke
+
+        results = sanitize_smoke()
+        dirty = [(n, m) for n, m in results if m is not None]
+        for name, msg in results:
+            print(f"# sanitize {name}: {'CLEAN' if msg is None else msg}")
+        if dirty:
+            failed = True
+            print(f"# sanitize: {len(dirty)} case(s) raised checkify "
+                  "errors", file=sys.stderr)
+        else:
+            print(f"# sanitize: {len(results)} case(s) clean")
+
+    if args.write_baseline:
+        args.baseline.write_text(
+            json.dumps(new_baseline, indent=2, sort_keys=True) + "\n"
+        )
+        print(f"# baseline written to {args.baseline}")
+        return 0
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional, Tuple
+from typing import Tuple
 
 # Input-shape cells assigned to the LM family (seq_len, global_batch, kind)
 SHAPES = {

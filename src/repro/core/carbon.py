@@ -104,7 +104,8 @@ class UKRegionalTraceSource:
             2 * jnp.pi * tt / (_SLOTS_PER_DAY * 2.1) + region.astype(jnp.float32)
         )
         front = wind * (0.7 * national + 0.3 * regional)
-        noise = 25.0 * jax.random.normal(jax.random.fold_in(key, region))
+        noise = 25.0 * jax.random.normal(jax.random.fold_in(key, region),
+                                         dtype=jnp.float32)
         return jnp.clip(mean + diurnal + front + noise, 5.0, 700.0)
 
     def __call__(self, t: Array, key: Array) -> Tuple[Array, Array]:

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policies import CarbonIntensityPolicy, QueueLengthPolicy
-from repro.core.queueing import Action, NetworkSpec, NetworkState
+from repro.core.queueing import Action, NetworkSpec
 
 Array = jax.Array
 

@@ -117,7 +117,8 @@ def bounded_knapsack_min(
             cand = jnp.where((e >= w) & valid, best[src] + val, jnp.inf)
             better = cand < best - 1e-9
             new_best = jnp.where(better, cand, best)
-            src_cnt = cnt[src] + jnp.zeros((grid + 1, M)).at[:, m].set(k)
+            src_cnt = cnt[src] + jnp.zeros((grid + 1, M),
+                                           jnp.float32).at[:, m].set(k)
             new_cnt = jnp.where(better[:, None], src_cnt, cnt)
             remaining = remaining - k.astype(jnp.int32)
             return (new_best, new_cnt, remaining), None

@@ -141,22 +141,32 @@ def greedy_fill(
         )
         return P, stopped, idx, takes.T
 
+    # Per-lane scatters flattened into ONE row-major scatter on [B*M]:
+    # bit-identical to the per-row vmap formulation (indices stay
+    # unique), one scatter instead of a batched one, and -- because an
+    # unbatched scatter is all checkify's OOB rule can instrument --
+    # the only formulation `analysis.sanitize` can lift with
+    # index_checks enabled.
+    def _rows(i):
+        return (i + M * jnp.arange(B, dtype=i.dtype)[:, None]).ravel()
+
+    def _scatter_add(t, i, v):
+        return t.ravel().at[_rows(i)].add(v.ravel()).reshape(B, M)
+
     stopped0 = jnp.zeros((B,), bool)
     if k == M:
         # One trip provably covers every item: skip the while_loop and
         # its exit bookkeeping entirely (the common small-M / fleet-lane
         # case; per-slot cost matches the old argsort+scan fill).
         _, _, idx, takes = walk_chunk(P0, stopped0, mkey0, True)
-        counts = jax.vmap(lambda t, i, v: t.at[i].add(v))(
-            jnp.zeros_like(scores), idx, takes
-        )
+        counts = _scatter_add(jnp.zeros_like(scores), idx, takes)
         return counts[0] if single else counts
 
     def trip(carry):
         P, stopped, take, mkey, act = carry
         P, stopped, idx, takes = walk_chunk(P, stopped, mkey, act[:, None])
-        take = jax.vmap(lambda t, i, v: t.at[i].add(v))(take, idx, takes)
-        done = jax.vmap(lambda m, i: m.at[i].set(jnp.inf))(mkey, idx)
+        take = _scatter_add(take, idx, takes)
+        done = mkey.ravel().at[_rows(idx)].set(jnp.inf).reshape(B, M)
         mkey = jnp.where(act[:, None], done, mkey)
         return P, stopped, take, mkey, active(P, stopped, mkey)
 
@@ -402,12 +412,12 @@ class RandomPolicy:
         # Random fractions of per-type feasible maxima, scaled to respect
         # the shared budget by dividing across types.
         M, N = spec.M, spec.N
-        fd = jax.random.uniform(kd, (M, N))
+        fd = jax.random.uniform(kd, (M, N), dtype=jnp.float32)
         cap_d = jnp.minimum(
             state.Qe[:, None] / N, (Pe / (M * N)) / pe[:, None]
         )
         d = jnp.floor(fd * jnp.maximum(cap_d, 0.0))
-        fw = jax.random.uniform(kw, (M, N))
+        fw = jax.random.uniform(kw, (M, N), dtype=jnp.float32)
         cap_w = jnp.minimum(state.Qc, (Pc[None, :] / M) / pc)
         w = jnp.floor(fw * jnp.maximum(cap_w, 0.0))
         return Action(d=d, w=w)

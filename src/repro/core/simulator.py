@@ -410,7 +410,8 @@ def simulate_fleet(
         carbon_source = TableCarbonSource(table=ctab)
 
         def arrival_source(t, kk):
-            u = jax.random.uniform(jax.random.fold_in(kk, t), (M,))
+            u = jax.random.uniform(jax.random.fold_in(kk, t), (M,),
+                                   dtype=jnp.float32)
             return jnp.floor(u * (amax + 1.0))
 
         return simulate(

@@ -12,7 +12,7 @@ Also provides the task-arrival processes that feed the GreenOrchestrator
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ the roofline notes).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import numpy as np

@@ -83,7 +83,8 @@ class ForecastErrorModel:
             key = jax.random.PRNGKey(self.seed)
         else:
             key = jax.random.fold_in(key, self.seed)
-        eps = jax.random.normal(jax.random.fold_in(key, t), truth.shape)
+        eps = jax.random.normal(jax.random.fold_in(key, t), truth.shape,
+                                dtype=jnp.float32)
         pred = truth * (1.0 + b) + n * truth * h[:, None] * eps
         pred = pred.at[0].set(truth[0])
         return jnp.maximum(pred, 0.0)

@@ -20,9 +20,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
-from repro.kernels.compat import CompilerParams
+from repro.kernels.compat import VMEM, CompilerParams
 
 NEG_INF = -1e30
 
@@ -129,9 +128,9 @@ def flash_attention(
         ),
         out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, hd), jnp.float32),
+            VMEM((bq, 1), jnp.float32),
+            VMEM((bq, 1), jnp.float32),
+            VMEM((bq, hd), jnp.float32),
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",

@@ -19,9 +19,12 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
-from repro.kernels.compat import CompilerParams
+from repro.kernels.compat import (
+    VMEM,
+    CompilerParams,
+    PrefetchScalarGridSpec,
+)
 
 NEG_INF = -1e30
 
@@ -90,7 +93,7 @@ def flash_decode(
     scale = 1.0 / math.sqrt(hd)
 
     qg = q.reshape(B, K, G, hd)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, K, ns),
         in_specs=[
@@ -104,9 +107,9 @@ def flash_decode(
             (1, 1, G, hd), lambda b, kh, ib, pos: (b, kh, 0, 0)
         ),
         scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, hd), jnp.float32),
+            VMEM((G, 1), jnp.float32),
+            VMEM((G, 1), jnp.float32),
+            VMEM((G, hd), jnp.float32),
         ],
     )
     out = pl.pallas_call(

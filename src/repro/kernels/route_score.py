@@ -28,9 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
-from repro.kernels.compat import CompilerParams
+from repro.kernels.compat import VMEM, CompilerParams
 
 POS_INF = 1e30
 
@@ -137,8 +136,8 @@ def route_scores(
             jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((bm, 1), jnp.float32),
-            pltpu.VMEM((bm, 1), jnp.float32),
+            VMEM((bm, 1), jnp.float32),
+            VMEM((bm, 1), jnp.float32),
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),

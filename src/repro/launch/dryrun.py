@@ -26,7 +26,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.distributed import api as dist_api

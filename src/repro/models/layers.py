@@ -10,8 +10,6 @@ no-op.
 from __future__ import annotations
 
 import math
-from typing import Callable, Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -54,34 +54,43 @@ class LinkGraph(NamedTuple):
 
 
 def make_graph(dest, bw, pt, region, size, primary) -> LinkGraph:
-    """Validating constructor from host (numpy/list) data."""
-    dest = jnp.asarray(dest, jnp.int32)
-    primary = jnp.asarray(primary, jnp.int32)
-    g = LinkGraph(
-        dest=dest,
-        bw=jnp.asarray(bw, jnp.float32),
-        pt=jnp.asarray(pt, jnp.float32),
-        region=jnp.asarray(region, jnp.int32),
-        size=jnp.asarray(size, jnp.float32),
-        primary=primary,
-    )
-    L, M, N = g.L, g.M, g.N
-    if g.bw.shape != (L,) or g.region.shape != (L,):
+    """Validating constructor from host (numpy/list) data.
+
+    Validation runs on numpy copies of the host inputs -- the jnp
+    arrays in the returned ``LinkGraph`` are never forced back to the
+    host (no ``bool(jnp.all(...))``), so constructing a graph cannot
+    introduce a device sync.
+    """
+    dest_h = np.asarray(dest, np.int32)
+    bw_h = np.asarray(bw, np.float32)
+    pt_h = np.asarray(pt, np.float32)
+    region_h = np.asarray(region, np.int32)
+    size_h = np.asarray(size, np.float32)
+    primary_h = np.asarray(primary, np.int32)
+    L, M, N = dest_h.shape[-1], size_h.shape[-1], primary_h.shape[-1]
+    if bw_h.shape != (L,) or region_h.shape != (L,):
         raise ValueError(f"bw/region must be [{L}]")
-    if g.pt.shape != (M, L):
-        raise ValueError(f"pt must be [{M}, {L}], got {g.pt.shape}")
-    if int(dest.max()) >= N or int(dest.min()) < 0:
+    if pt_h.shape != (M, L):
+        raise ValueError(f"pt must be [{M}, {L}], got {pt_h.shape}")
+    if int(dest_h.max()) >= N or int(dest_h.min()) < 0:
         raise ValueError(f"dest out of range for N={N}")
-    if int(g.region.max()) > N or int(g.region.min()) < 0:
-        raise ValueError(f"region indexes the [N+1] intensity row")
+    if int(region_h.max()) > N or int(region_h.min()) < 0:
+        raise ValueError("region indexes the [N+1] intensity row")
     # zero/negative sizes would make floor(prog/size) NaN deep inside
     # the scan; negative bandwidth would silently un-transfer work
-    if not bool(jnp.all(g.size > 0)):
+    if not np.all(size_h > 0):
         raise ValueError("size must be strictly positive per task type")
-    if not bool(jnp.all(g.bw >= 0)):
+    if not np.all(bw_h >= 0):
         raise ValueError("bw must be non-negative (use jnp.inf for "
                          "unconstrained links)")
-    return g
+    return LinkGraph(
+        dest=jnp.asarray(dest_h),
+        bw=jnp.asarray(bw_h),
+        pt=jnp.asarray(pt_h),
+        region=jnp.asarray(region_h),
+        size=jnp.asarray(size_h),
+        primary=jnp.asarray(primary_h),
+    )
 
 
 def direct_graph(M: int, N: int) -> LinkGraph:

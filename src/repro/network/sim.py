@@ -30,7 +30,6 @@ from repro.core.queueing import NetworkState, NetworkSpec, init_state
 from repro.core.simulator import _record_scan, init_forecaster_carry
 from repro.network.graph import LinkGraph
 from repro.network.transfer import (
-    LinkState,
     NetAction,
     init_links,
     land_in_clouds,

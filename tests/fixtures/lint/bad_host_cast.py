@@ -1,0 +1,6 @@
+"""Seeded violation: host-cast (float() on a traced jnp expression)."""
+import jax.numpy as jnp
+
+
+def traced_mean(x):
+    return float(jnp.mean(x))

@@ -1,0 +1,9 @@
+"""Seeded violation: jnp-for (Python loop over a jnp expression)."""
+import jax.numpy as jnp
+
+
+def unrolled_sum(n):
+    total = jnp.float32(0)
+    for v in jnp.arange(n):
+        total = total + v
+    return total

@@ -1,0 +1,11 @@
+"""Seeded violation: np-in-scan (numpy inside a lax.scan body)."""
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def drift(xs):
+    def body(carry, x):
+        return carry + np.float64(0.5) * x, carry
+
+    return lax.scan(body, jnp.float32(0), xs)

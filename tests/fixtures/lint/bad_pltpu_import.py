@@ -1,0 +1,4 @@
+"""Seeded violation: pltpu-import (bypasses kernels/compat.py)."""
+import jax.experimental.pallas.tpu as pltpu
+
+VMEM = pltpu.VMEM

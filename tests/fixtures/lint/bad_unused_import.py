@@ -1,0 +1,4 @@
+"""Seeded violation: unused-import (module-level, never referenced)."""
+import os
+
+ANSWER = 42

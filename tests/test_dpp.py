@@ -13,7 +13,6 @@ from hypothesis.extra import numpy as hnp
 from repro.core import dpp
 from repro.core.policies import CarbonIntensityPolicy, RandomPolicy
 from repro.core.queueing import (
-    Action,
     NetworkSpec,
     NetworkState,
     drift_bound_B,

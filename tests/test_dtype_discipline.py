@@ -1,0 +1,106 @@
+"""Parametrized dtype discipline over every recorded trajectory field.
+
+The simulator contract (DESIGN.md, core/queueing.py DTYPE) is float32
+state and int32 counters everywhere -- no float64 creep, no weak types,
+no surprise promotions -- across every policy, both score backends, and
+all three recording modes. The jaxpr auditor proves this abstractly for
+the registry; this test proves it on concrete outputs, field by field.
+"""
+import jax
+import pytest
+
+from repro.configs.fleet_scenarios import build_fleet, build_network_fleet
+from repro.core.policies import (
+    CarbonIntensityPolicy,
+    LookaheadDPPPolicy,
+    QueueLengthPolicy,
+    RandomPolicy,
+)
+from repro.core.simulator import simulate_fleet
+from repro.forecast import SeasonalNaiveForecaster
+from repro.network import NetworkAwareDPPPolicy, StaticRoutePolicy
+
+T = 10
+ALLOWED = {"float32", "int32"}
+
+POLICIES = [
+    ("ci/reference", lambda: CarbonIntensityPolicy(), None),
+    ("ci/pallas",
+     lambda: CarbonIntensityPolicy(score_backend="pallas"), None),
+    ("queue-length", lambda: QueueLengthPolicy(), None),
+    ("random", lambda: RandomPolicy(), None),
+    ("lookahead", lambda: LookaheadDPPPolicy(H=4),
+     SeasonalNaiveForecaster(H=4, period=6)),
+]
+
+WAN_POLICIES = [
+    ("aware/reference", lambda: NetworkAwareDPPPolicy()),
+    ("aware/pallas",
+     lambda: NetworkAwareDPPPolicy(score_backend="pallas")),
+    ("blind", lambda: StaticRoutePolicy(CarbonIntensityPolicy())),
+]
+
+RECORDS = ["full", "summary", 2]
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return build_fleet(["diurnal-slack"], per_kind=1, M=4, N=3,
+                       Tc=24, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wan_fleet():
+    return build_network_fleet(["star"], per_kind=1, M=4, N=3,
+                               Tc=24, seed=0)
+
+
+def _assert_disciplined(res, label):
+    fields = getattr(res, "_fields", None)
+    assert fields, f"{label}: result is not a NamedTuple"
+    for field in fields:
+        leaf = getattr(res, field)
+        dtype = str(leaf.dtype)
+        assert dtype in ALLOWED, (
+            f"{label}: field {field!r} is {dtype}, not in {ALLOWED}"
+        )
+        assert not getattr(leaf, "weak_type", False), (
+            f"{label}: field {field!r} is weak-typed"
+        )
+
+
+@pytest.mark.parametrize("record", RECORDS,
+                         ids=[str(r) for r in RECORDS])
+@pytest.mark.parametrize("name,make,forecaster", POLICIES,
+                         ids=[p[0] for p in POLICIES])
+def test_fleet_trajectory_dtypes(fleet, name, make, forecaster, record):
+    res = simulate_fleet(make(), fleet, T, jax.random.PRNGKey(0),
+                         forecaster=forecaster, record=record)
+    _assert_disciplined(res, f"{name}/record={record}")
+
+
+@pytest.mark.parametrize("record", RECORDS,
+                         ids=[str(r) for r in RECORDS])
+@pytest.mark.parametrize("name,make", WAN_POLICIES,
+                         ids=[p[0] for p in WAN_POLICIES])
+def test_wan_trajectory_dtypes(wan_fleet, name, make, record):
+    res = simulate_fleet(make(), wan_fleet, T, jax.random.PRNGKey(0),
+                         record=record)
+    _assert_disciplined(res, f"{name}/record={record}")
+
+
+def test_fleet_trajectory_dtypes_stable_under_x64(fleet):
+    """The pinned dtypes hold even when tracing with x64 enabled --
+    the config that used to flip the arrival draws to float64."""
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        closed = jax.make_jaxpr(
+            lambda f, k: simulate_fleet(
+                CarbonIntensityPolicy(), f, T, k, record="summary"
+            )
+        )(fleet, jax.random.PRNGKey(0))
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+    dtypes = {str(v.aval.dtype) for v in closed.jaxpr.outvars}
+    assert "float64" not in dtypes, dtypes

@@ -20,13 +20,11 @@ from repro.core import (
 )
 from repro.core.queueing import NetworkSpec, NetworkState
 from repro.network import (
-    LinkGraph,
     NetworkAwareDPPPolicy,
     StaticRoutePolicy,
     direct_graph,
     init_links,
     make_graph,
-    simulate_network,
     step_links,
 )
 

@@ -1,9 +1,6 @@
 """GreenOrchestrator integration tests: real training under the paper's
 scheduler, fault tolerance, straggler mitigation, elasticity."""
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -6,11 +6,9 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.configs import registry
-from repro.data.pipeline import TokenStream, make_batch_fn
+from repro.data.pipeline import TokenStream
 from repro.distributed import compression as comp
-from repro.models import build_model
-from repro.optim.adamw import AdamW, cosine_schedule, make_train_step
+from repro.optim.adamw import AdamW, cosine_schedule
 
 
 # ----------------------------------------------------------- checkpoint --
