@@ -33,6 +33,11 @@ Row = Tuple[str, float, float]
 # exercise every code path (compile + execute) without the full sweep.
 SMOKE = False
 
+# run.py --seed sets this and stamps it on every results.json row, so
+# any committed number can be re-derived exactly. Benches that draw
+# instances read it at call time (run.py assigns before dispatch).
+SEED = 0
+
 
 def _timeit(fn, n=5) -> float:
     fn()  # compile
@@ -550,6 +555,150 @@ def bench_network_routing() -> List[Row]:
     return rows
 
 
+def bench_fault_robustness() -> List[Row]:
+    """Scheduling through faults (repro.faults). For every registered
+    fault scenario, three policies run the same faulted fleet in one
+    compiled call each:
+
+      * queue-length      -- carbon-blind, throughput-optimal baseline;
+      * carbon (unguarded)-- the paper's DPP policy, fault-blind;
+      * guard(carbon)     -- StalenessGuardPolicy around the same DPP.
+
+    Rows per (scenario, policy):
+      fault/<scen>/<pol>            us_per_call per lane-slot,
+                                    derived = backlog-recovery-time:
+                                    mean slots per lane where the
+                                    fault-induced EXCESS backlog (vs
+                                    the same policy's zero-fault run)
+                                    exceeds two mean slots of arrivals
+                                    -- a ratio test would be blind to
+                                    outage damage on top of the DPP
+                                    policies' large V-induced steady
+                                    backlog;
+      fault/<scen>/<pol>/emissions  derived = % emission reduction vs
+                                    queue-length on the SAME faults;
+      fault/<scen>/<pol>/completed  derived = % of arrived tasks
+                                    completed (processed - failed).
+
+    Before any timing, the zero-fault fleet is asserted bitwise equal
+    to the fault-free simulator (both score backends) -- the fault
+    layer can never skew a committed number. Full-size runs also assert
+    the acceptance ordering on the plain-fleet scenarios: the guard
+    strictly beats unguarded carbon on recovery time and beats
+    queue-length on emissions.
+    """
+    from repro.configs.fleet_scenarios import (
+        build_fleet, build_network_fleet, with_faults,
+    )
+    from repro.core import simulate_fleet
+    from repro.faults import StalenessGuardPolicy, no_faults, stack_faults
+    from repro.network import NetworkAwareDPPPolicy
+
+    V = 0.05
+    per_kind, T = (4, 48) if SMOKE else (16, 192)
+    key = jax.random.PRNGKey(SEED)
+    rows: List[Row] = []
+
+    fleet = build_fleet(["diurnal-slack"], per_kind=per_kind, Tc=96,
+                        seed=SEED)
+    wan = build_network_fleet(["congested-uplink"], per_kind=per_kind,
+                              Tc=96, seed=SEED)
+
+    def zero_faulted(flt):
+        N = flt.spec.Pc.shape[1]
+        L = None if flt.graph is None else flt.graph.bw.shape[-1]
+        return flt._replace(
+            faults=stack_faults([no_faults(N, L)] * flt.F)
+        )
+
+    # zero-fault bitwise anchor on both score backends, before timing
+    for backend in ("reference", "pallas"):
+        pol = StalenessGuardPolicy(
+            inner=CarbonIntensityPolicy(V=V, score_backend=backend)
+        )
+        r0 = jax.jit(lambda p=pol: simulate_fleet(
+            p.inner, fleet, T, key, record="summary"))()
+        r1 = jax.jit(lambda p=pol: simulate_fleet(
+            p, zero_faulted(fleet), T, key, record="summary"))()
+        np.testing.assert_array_equal(
+            np.asarray(r0.cum_emissions), np.asarray(r1.cum_emissions),
+            err_msg=f"zero-fault parity broke ({backend})",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r0.Qe[:, -1]), np.asarray(r1.Qe[:, -1]),
+            err_msg=f"zero-fault parity broke ({backend})",
+        )
+
+    def run(pol, flt):
+        f = jax.jit(lambda: simulate_fleet(
+            pol, flt, T, key, record="summary"
+        ))
+        f()  # compile
+        best, res = np.inf, None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res = f()
+            jax.block_until_ready(res.cum_emissions)
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6, res
+
+    def measure(name, flt, policies, plain):
+        F = flt.F
+        stats = {}
+        for pname, pol in policies:
+            faulted = with_faults(flt, name, seed=SEED)
+            us, r = run(pol, faulted)
+            _, r0 = run(pol, zero_faulted(flt))
+            excess = np.asarray(r.backlog) - np.asarray(r0.backlog)
+            theta = 2.0 * np.asarray(r.arrived).mean()
+            recovery = float((excess > theta).sum(axis=-1).mean())
+            em = float(np.asarray(r.cum_emissions[:, -1]).mean())
+            done = np.asarray(r.processed).sum() - np.asarray(
+                r.failed).sum()
+            completed = float(
+                100.0 * done / max(np.asarray(r.arrived).sum(), 1.0)
+            )
+            stats[pname] = (us / (F * T), recovery, em, completed)
+        em_qlen = stats["qlen"][2]
+        for pname, (us, recovery, em, completed) in stats.items():
+            rows.append((f"fault/{name}/{pname}", us, recovery))
+            rows.append((f"fault/{name}/{pname}/emissions", 0.0,
+                         100.0 * (1.0 - em / em_qlen)))
+            rows.append((f"fault/{name}/{pname}/completed", 0.0,
+                         completed))
+        if not SMOKE and plain:
+            # acceptance ordering: degradation-awareness must pay off
+            assert stats["guard"][1] < stats["carbon"][1], (
+                f"{name}: guard recovery {stats['guard'][1]:.1f} not "
+                f"better than unguarded {stats['carbon'][1]:.1f}"
+            )
+            assert stats["guard"][2] < em_qlen, (
+                f"{name}: guard emissions {stats['guard'][2]:.3g} not "
+                f"below queue-length {em_qlen:.3g}"
+            )
+        return stats
+
+    carbon = CarbonIntensityPolicy(V=V)
+    plain_policies = [
+        ("qlen", QueueLengthPolicy()),
+        ("carbon", carbon),
+        ("guard", StalenessGuardPolicy(inner=carbon)),
+    ]
+    for scen in ("regional-blackout", "telemetry-brownout"):
+        measure(scen, fleet, plain_policies, plain=True)
+
+    aware = NetworkAwareDPPPolicy(V=V)
+    from repro.network import StaticRoutePolicy
+
+    wan_policies = [
+        ("qlen", StaticRoutePolicy(QueueLengthPolicy())),
+        ("carbon", aware),
+        ("guard", StalenessGuardPolicy(inner=aware)),
+    ]
+    measure("flappy-uplink", wan, wan_policies, plain=False)
+    return rows
+
+
 ALL_BENCHES = [
     bench_table1,
     bench_fig2_random,
@@ -563,4 +712,5 @@ ALL_BENCHES = [
     bench_fleet_summary,
     bench_forecast_lookahead,
     bench_network_routing,
+    bench_fault_robustness,
 ]

@@ -39,8 +39,13 @@ def main() -> None:
     ap.add_argument("--compare-floor", type=float, default=100.0,
                     help="skip baseline rows faster than this many "
                          "microseconds (timer noise)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for bench instances; stamped into "
+                         "every results.json row so any committed "
+                         "number can be re-derived exactly")
     args = ap.parse_args()
     paper_benches.SMOKE = args.smoke
+    paper_benches.SEED = args.seed
     benches = [
         b for b in ALL_BENCHES
         if not args.only or any(s in b.__name__ for s in args.only)
@@ -53,6 +58,7 @@ def main() -> None:
     env = {
         "jax_version": jax.__version__,
         "platform": jax.default_backend(),
+        "seed": args.seed,
     }
 
     ART.mkdir(parents=True, exist_ok=True)

@@ -192,6 +192,49 @@ def iter_combos(per_kind: int = AUDIT_PER_KIND) -> List[Combo]:
                 make_policy=make, forecaster=fc, fleet=fleet,
                 record="full",
             ))
+
+    # Fault-layer combos (repro.faults): stacked FaultParams put the
+    # fault chains, staleness/backoff counters and retry pool into the
+    # scan carry -- every gate (carry dtypes, weak types, x64 re-trace,
+    # retrace signatures) covers them from day one.
+    from repro.configs.fleet_scenarios import with_faults
+    from repro.core.policies import CarbonIntensityPolicy
+    from repro.faults import StalenessGuardPolicy
+    from repro.network import NetworkAwareDPPPolicy
+
+    blackout = with_faults(base, "regional-blackout")
+    brownout = with_faults(base, "telemetry-brownout")
+    flappy = with_faults(wan_fleets["congested-uplink"], "flappy-uplink")
+    fault_combos = [
+        ("ci/reference", lambda: CarbonIntensityPolicy(),
+         "regional-blackout", blackout, "full"),
+        ("ci/pallas",
+         lambda: CarbonIntensityPolicy(score_backend="pallas"),
+         "regional-blackout", blackout, "full"),
+        ("guard-ci/reference",
+         lambda: StalenessGuardPolicy(CarbonIntensityPolicy()),
+         "regional-blackout", blackout, "full"),
+        ("guard-ci/reference",
+         lambda: StalenessGuardPolicy(CarbonIntensityPolicy()),
+         "telemetry-brownout", brownout, "full"),
+        ("guard-ci/reference",
+         lambda: StalenessGuardPolicy(CarbonIntensityPolicy()),
+         "telemetry-brownout/summary", brownout, "summary"),
+        ("queue-length", _policy_factories()[2][1],
+         "telemetry-brownout", brownout, "full"),
+        ("aware/reference", lambda: NetworkAwareDPPPolicy(),
+         "flappy-uplink", flappy, "full"),
+        ("guard-aware/reference",
+         lambda: StalenessGuardPolicy(NetworkAwareDPPPolicy()),
+         "flappy-uplink", flappy, "full"),
+    ]
+    for policy_key, make, scen, fleet, record in fault_combos:
+        combos.append(Combo(
+            name=f"{policy_key}@diurnal-slack+{scen}",
+            policy_key=policy_key, scenario=scen,
+            make_policy=make, forecaster=None, fleet=fleet,
+            record=record,
+        ))
     return combos
 
 

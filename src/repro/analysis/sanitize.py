@@ -83,7 +83,13 @@ def sanitize_smoke(T: int = SMOKE_T) -> List[Tuple[str, str | None]]:
         topology (transfer dynamics incl. the bw=inf-safe drain ratio);
       * fleet sweep with the clairvoyant forecaster + error model (the
         ``jax.random.normal`` corruption path);
-      * single-instance ``simulate`` at the paper spec with full checks.
+      * single-instance ``simulate`` at the paper spec with full checks;
+      * the fault layer: the blackout fleet under the staleness guard,
+        the flappy-uplink WAN fleet (hard link flap -> the bw-scale
+        ``inf * 0`` guard in ``step_links``), and a single-instance
+        faulted run with full checks (outage masking, stochastic
+        requeue rounding, and the wasted-emissions ledger must all
+        stay NaN-free and in-bounds).
     """
     from repro.configs.fleet_scenarios import (
         build_fleet,
@@ -98,6 +104,8 @@ def sanitize_smoke(T: int = SMOKE_T) -> List[Tuple[str, str | None]]:
         ClairvoyantTableForecaster,
         SeasonalNaiveForecaster,
     )
+    from repro.configs.fleet_scenarios import with_faults
+    from repro.faults import StalenessGuardPolicy
     from repro.network import NetworkAwareDPPPolicy
 
     key = jax.random.PRNGKey(0)
@@ -122,6 +130,14 @@ def sanitize_smoke(T: int = SMOKE_T) -> List[Tuple[str, str | None]]:
              LookaheadDPPPolicy(H=4),
              sweep_forecast_errors(fleet, bias=0.05, noise=0.1), T, key,
              forecaster=ClairvoyantTableForecaster(H=4))),
+        ("fleet/diurnal-slack+blackout/guard-ci",
+         lambda: checkified_simulate_fleet(
+             StalenessGuardPolicy(inner=CarbonIntensityPolicy()),
+             with_faults(fleet, "regional-blackout"), T, key)),
+        ("fleet/congested-uplink+flappy/guard-aware",
+         lambda: checkified_simulate_fleet(
+             StalenessGuardPolicy(inner=NetworkAwareDPPPolicy()),
+             with_faults(wan, "flappy-uplink"), T, key)),
     ]
 
     # single-instance simulate() path (non-fleet entry point)
@@ -151,6 +167,29 @@ def sanitize_smoke(T: int = SMOKE_T) -> List[Tuple[str, str | None]]:
     # full check set (incl. OOB) must discharge through it
     cases.append(("single/paper-spec/chunked-fill-while-loop",
                   single(CarbonIntensityPolicy(fill_chunk=2))))
+
+    # single-instance faulted path with the full check set: brownouts +
+    # telemetry dropouts + task failures exercise the requeue rounding
+    # and the wasted-emissions ledger under OOB instrumentation too
+    from repro.faults import make_faults, simulate_faulted
+
+    def single_faulted():
+        fp = make_faults(
+            spec.N, cloud_p_down=0.05, cloud_p_up=0.3,
+            brown_p_start=0.1, brown_p_end=0.2, brown_floor=0.5,
+            telem_p_down=0.2, telem_p_up=0.2, task_p_fail=0.1,
+        )
+
+        def run(k):
+            return simulate_faulted(
+                StalenessGuardPolicy(inner=CarbonIntensityPolicy()),
+                spec, fp, RandomCarbonSource(N=spec.N),
+                UniformArrivals(M=spec.M), T, k,
+            )
+
+        return jax.jit(checkify.checkify(run, errors=DEFAULT_CHECKS))(key)
+
+    cases.append(("single/paper-spec+faults/guard-ci", single_faulted))
 
     results: List[Tuple[str, str | None]] = []
     for name, runner in cases:

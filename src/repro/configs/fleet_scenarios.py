@@ -248,6 +248,104 @@ def build_network_fleet(
     return stack_scenarios(instances, graphs=graphs)
 
 
+# ---------------------------------------------------------------------------
+# Fault scenario registry (repro.faults). Each generator returns one
+# lane's FaultParams from an instance-local RNG; `with_faults` stacks
+# per-lane draws onto a fleet's `faults` axis so one compiled
+# `simulate_fleet` call sweeps the fault scenario across lanes.
+#
+#   * regional-blackout  -- one random cloud per lane loses ALL capacity
+#     for a scheduled mid-run window (plus rare Markov flickers and task
+#     failures): the recovery-time scenario.
+#   * telemetry-brownout -- long carbon-feed dropouts (policy sees stale
+#     intensities for ~10-20 slots at a stretch) plus partial capacity
+#     brownouts: the staleness-guard scenario.
+#   * flappy-uplink      -- WAN-only: clean alternate routes (odd link
+#     indices in the congested-uplink topology) hard-flap on a Markov
+#     chain; dirty primaries stay mostly up.
+
+
+def regional_blackout(M: int, N: int, L, rng: np.random.Generator):
+    from repro.faults import make_faults
+
+    del M
+    sched_start = np.zeros((N,), np.float32)
+    sched_len = np.zeros((N,), np.float32)
+    n_b = int(rng.integers(N))
+    sched_start[n_b] = float(rng.uniform(40.0, 64.0))
+    sched_len[n_b] = float(rng.uniform(24.0, 48.0))
+    return make_faults(
+        N, L,
+        sched_start=sched_start, sched_len=sched_len,
+        cloud_p_down=0.004, cloud_p_up=0.25,
+        task_p_fail=0.03, backoff_max=6.0,
+    )
+
+
+def telemetry_brownout(M: int, N: int, L, rng: np.random.Generator):
+    from repro.faults import make_faults
+
+    del M, rng
+    return make_faults(
+        N, L,
+        telem_p_down=0.10, telem_p_up=0.06,
+        brown_p_start=0.04, brown_p_end=0.20, brown_floor=0.5,
+    )
+
+
+def flappy_uplink(M: int, N: int, L, rng: np.random.Generator):
+    from repro.faults import make_faults
+
+    del M, rng
+    if L is None:
+        raise ValueError(
+            "flappy-uplink is a WAN fault scenario: build it on a "
+            "network fleet (with_faults over build_network_fleet)"
+        )
+    alt = (np.arange(L) % 2 == 1)
+    return make_faults(
+        N, L,
+        link_p_down=np.where(alt, 0.12, 0.02).astype(np.float32),
+        link_p_up=np.full((L,), 0.35, np.float32),
+        link_floor=np.zeros((L,), np.float32),
+        task_p_fail=0.01,
+    )
+
+
+FAULT_SCENARIOS: Dict[str, Callable] = {
+    "regional-blackout": regional_blackout,
+    "telemetry-brownout": telemetry_brownout,
+    "flappy-uplink": flappy_uplink,
+}
+
+
+def with_faults(
+    fleet: FleetScenario, kind: str, seed: int = 0
+) -> FleetScenario:
+    """Attaches per-lane draws of a named fault scenario to a fleet
+    (stacked on the `faults` axis). Lane j draws from
+    default_rng((seed, 9, j)) -- disjoint from the instance streams
+    `build_fleet` uses, so the same fleet is comparable with and
+    without faults."""
+    from repro.faults import stack_faults
+
+    try:
+        gen = FAULT_SCENARIOS[kind]
+    except KeyError:
+        raise KeyError(
+            f"unknown fault scenario {kind!r}; registered: "
+            f"{sorted(FAULT_SCENARIOS)}"
+        ) from None
+    M = fleet.arrival_amax.shape[1]
+    N = fleet.spec.Pc.shape[1]
+    L = None if fleet.graph is None else fleet.graph.bw.shape[-1]
+    params = [
+        gen(M, N, L, np.random.default_rng((seed, 9, j)))
+        for j in range(fleet.F)
+    ]
+    return fleet._replace(faults=stack_faults(params))
+
+
 def build_fleet(
     kinds: Sequence[str] = tuple(SCENARIOS),
     per_kind: int = 16,

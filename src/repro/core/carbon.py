@@ -49,6 +49,25 @@ class ConstantCarbonSource:
     Ce: float = 200.0
     Cc: float = 200.0
 
+    def __post_init__(self):
+        # Host-side shape/value validation only (numpy on static
+        # metadata, no device syncs -- the analysis lint rules): a
+        # mis-shaped Cc would otherwise broadcast or fail slots deep
+        # inside a scan.
+        if int(self.N) < 1:
+            raise ValueError(
+                f"ConstantCarbonSource needs N >= 1 clouds, got N={self.N}"
+            )
+        if np.shape(self.Ce) != ():
+            raise ValueError(
+                f"Ce must be a scalar intensity, got shape {np.shape(self.Ce)}"
+            )
+        if np.shape(self.Cc) not in ((), (int(self.N),)):
+            raise ValueError(
+                f"Cc must be a scalar or [N={self.N}] intensities, got "
+                f"shape {np.shape(self.Cc)}"
+            )
+
     def __call__(self, t: Array, key: Array) -> Tuple[Array, Array]:
         del key
         return (
@@ -122,7 +141,22 @@ class TableCarbonSource:
     table: np.ndarray
 
     def __post_init__(self):
-        assert self.table.ndim == 2 and self.table.shape[1] >= 2
+        # Shape-only checks: valid on TRACERS too (simulate_fleet
+        # constructs one per vmapped lane with a traced table slab), so
+        # no values are read and nothing syncs the device.
+        shape = getattr(self.table, "shape", None)
+        if shape is None or len(shape) != 2:
+            raise ValueError(
+                "TableCarbonSource.table must be a [T, N+1] array "
+                f"(col 0 = edge), got "
+                f"{'no shape' if shape is None else f'shape {tuple(shape)}'}"
+            )
+        if shape[0] < 1 or shape[1] < 2:
+            raise ValueError(
+                f"TableCarbonSource.table shape {tuple(shape)} needs at "
+                "least 1 row and 2 columns (edge + >=1 cloud); a "
+                "mis-sized table would index-garble silently"
+            )
 
     @property
     def N(self) -> int:

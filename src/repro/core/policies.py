@@ -16,6 +16,11 @@ All policies share the signature:
 a_m(t)"): the paper's queue update (7) applies d to the pre-arrival queue;
 policies only clip d by the current Qe, matching the pseudocode.
 
+Every policy also accepts a `fault_view=` kwarg (a repro.faults
+FaultView, passed by the faulted simulators) and deliberately ignores
+it: base policies model the fair-weather scheduler, and all graceful
+degradation lives in repro.faults.guard.StalenessGuardPolicy.
+
 Notes vs. the paper's pseudocode (documented in DESIGN.md):
   * The edge branch of Algorithm 1 prints `P <- P - floor(P/pe)*pe` while
     the cloud branch subtracts the *scheduled* energy `w*pc`. We treat the
@@ -267,8 +272,9 @@ class CarbonIntensityPolicy:
         Cc: Array,
         arrivals: Array,
         key: Array | None = None,
+        fault_view=None,
     ) -> Action:
-        del arrivals, key
+        del arrivals, key, fault_view
         pe, pc, Pe, Pc = spec.as_arrays()
         V = jnp.asarray(self.V, jnp.float32)
 
@@ -340,7 +346,9 @@ class LookaheadDPPPolicy(CarbonIntensityPolicy):
         arrivals: Array,
         key: Array | None = None,
         forecast: Array | None = None,
+        fault_view=None,
     ) -> Action:
+        del fault_view
         Ce_eff, Cc_eff = self.effective_intensities(Ce, Cc, forecast)
         return super().__call__(state, spec, Ce_eff, Cc_eff, arrivals, key)
 
@@ -366,8 +374,9 @@ class QueueLengthPolicy:
         Cc: Array,
         arrivals: Array,
         key: Array | None = None,
+        fault_view=None,
     ) -> Action:
-        del Ce, Cc, arrivals, key
+        del Ce, Cc, arrivals, key, fault_view
         pe, pc, Pe, Pc = spec.as_arrays()
         n1 = jnp.argmin(state.Qc, axis=1)
 
@@ -405,8 +414,9 @@ class RandomPolicy:
         Cc: Array,
         arrivals: Array,
         key: Array,
+        fault_view=None,
     ) -> Action:
-        del Ce, Cc, arrivals
+        del Ce, Cc, arrivals, fault_view
         pe, pc, Pe, Pc = spec.as_arrays()
         kd, kw = jax.random.split(key)
         # Random fractions of per-type feasible maxima, scaled to respect
@@ -441,8 +451,9 @@ class ExactDPPPolicy:
         Cc: Array,
         arrivals: Array,
         key: Array | None = None,
+        fault_view=None,
     ) -> Action:
-        del arrivals, key
+        del arrivals, key, fault_view
         from repro.core.knapsack import bounded_knapsack_min
 
         pe, pc, Pe, Pc = spec.as_arrays()

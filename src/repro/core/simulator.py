@@ -167,6 +167,7 @@ def simulate(
     graph=None,
     error_params=None,
     record: str | int = "full",
+    faults=None,
 ) -> SimResult:
     """Runs the network for T slots under `policy`.
 
@@ -201,12 +202,28 @@ def simulate(
     Qt [M, L] joins the scan carry, the policy is called with
     `graph=`/`Qt=` keywords and must return a NetAction, and the result
     is a NetSimResult (extra Qt / delivered / energy_transfer fields).
+
+    When `faults` (a repro.faults.FaultParams) is given the run goes
+    through the fault layer (repro.faults.sim): outage/brownout/
+    telemetry chains join the scan carry, the policy sees observed
+    (possibly stale) intensities, capacity-masked budgets and a
+    `fault_view=` kwarg, and the result is a FaultSimResult. With
+    `faults=None` this body is untouched, and with all fault rates zero
+    the faulted body is bitwise-identical to it (tests/test_faults.py).
     """
     if graph is not None:
         from repro.network.sim import simulate_network
 
         return simulate_network(
             policy, spec, graph, carbon_source, arrival_source, T, key,
+            state0=state0, forecaster=forecaster,
+            error_params=error_params, record=record, faults=faults,
+        )
+    if faults is not None:
+        from repro.faults.sim import simulate_faulted
+
+        return simulate_faulted(
+            policy, spec, faults, carbon_source, arrival_source, T, key,
             state0=state0, forecaster=forecaster,
             error_params=error_params, record=record,
         )
@@ -311,6 +328,11 @@ class FleetScenario(NamedTuple):
                    handed to the forecaster's init as
                    `error=(bias, noise)`: ONE compiled call sweeps
                    forecast quality across lanes.
+      faults    -- stacked repro.faults.FaultParams (leading axis F):
+                   every lane simulates through the fault layer and the
+                   result is a FaultSimResult / NetFaultSimResult. See
+                   configs.fleet_scenarios.with_faults for the scenario
+                   registry.
     """
 
     spec: FleetSpec
@@ -319,6 +341,7 @@ class FleetScenario(NamedTuple):
     graph: object | None = None       # stacked LinkGraph or None
     err_bias: Array | None = None     # [F] forecast bias per lane
     err_noise: Array | None = None    # [F] forecast noise per lane
+    faults: object | None = None      # stacked FaultParams or None
 
     @property
     def F(self) -> int:
@@ -402,7 +425,7 @@ def simulate_fleet(
     M = fleet.arrival_amax.shape[1]
     keys = jax.random.split(key, F)
 
-    def one(pe, pc, Pe, Pc, ctab, amax, k, graph, err):
+    def one(pe, pc, Pe, Pc, ctab, amax, k, graph, err, faults):
         spec = NetworkSpec(pe=pe, pc=pc, Pe=Pe, Pc=Pc)
         # TableCarbonSource traces fine with a batched ctab; its .table
         # attribute is also how simulate() hands each lane's slab to
@@ -417,7 +440,7 @@ def simulate_fleet(
         return simulate(
             policy, spec, carbon_source, arrival_source, T, k,
             forecaster=forecaster, graph=graph, error_params=err,
-            record=record,
+            record=record, faults=faults,
         )
 
     err = (
@@ -428,10 +451,12 @@ def simulate_fleet(
         one,
         in_axes=(0, 0, 0, 0, 0, 0, 0,
                  0 if fleet.graph is not None else None,
-                 0 if err is not None else None),
+                 0 if err is not None else None,
+                 0 if fleet.faults is not None else None),
     )(
         fleet.spec.pe, fleet.spec.pc, fleet.spec.Pe, fleet.spec.Pc,
         fleet.carbon, fleet.arrival_amax, keys, fleet.graph, err,
+        fleet.faults,
     )
 
 

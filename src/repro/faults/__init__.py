@@ -1,0 +1,45 @@
+"""Fault injection + graceful degradation for the scheduler.
+
+`model.py` -- the fault processes (Markov outages, brownouts, link
+flaps, telemetry dropouts, task failure + backoff retry) as
+scan-carried pure-JAX state; `sim.py` -- the faulted simulator bodies
+that `simulate(..., faults=...)` delegates to; `guard.py` -- the
+StalenessGuardPolicy degradation wrapper. The zero-fault anchor
+(`no_faults` => bitwise-identical trajectories to the fault-free
+simulator) is this subsystem's regression invariant.
+"""
+from repro.faults.guard import StalenessGuardPolicy
+from repro.faults.model import (
+    FaultParams,
+    FaultState,
+    FaultView,
+    init_faults,
+    make_faults,
+    no_faults,
+    requeue_failed,
+    stack_faults,
+    step_faults,
+)
+from repro.faults.sim import (
+    FaultSimResult,
+    NetFaultSimResult,
+    simulate_faulted,
+    simulate_network_faulted,
+)
+
+__all__ = [
+    "FaultParams",
+    "FaultState",
+    "FaultView",
+    "FaultSimResult",
+    "NetFaultSimResult",
+    "StalenessGuardPolicy",
+    "init_faults",
+    "make_faults",
+    "no_faults",
+    "requeue_failed",
+    "simulate_faulted",
+    "simulate_network_faulted",
+    "stack_faults",
+    "step_faults",
+]

@@ -1,0 +1,101 @@
+"""Graceful degradation: the StalenessGuardPolicy wrapper.
+
+Base policies in this repo are deliberately fault-blind -- they model
+the fair-weather scheduler and ignore the `fault_view` kwarg the
+faulted simulator passes. All degradation behavior lives here, in one
+wrapper that works on any drift-plus-penalty policy (anything with a
+`V` field: CarbonIntensityPolicy, LookaheadDPPPolicy,
+NetworkAwareDPPPolicy):
+
+  * staleness blending -- the effective penalty weight decays linearly
+    with the carbon signal's age, V_eff = V * max(0, 1 - stale/s0).
+    Past `stale_after` slots the policy is exactly the V=0
+    drift-minimizer: dispatch on pure backpressure, process anything
+    queued -- carbon-blind but throughput-stable, which is the right
+    trade when the carbon numbers are fiction anyway;
+  * outage-aware dispatch -- down clouds get `outage_penalty` added to
+    their Qc columns before scoring, so the argmin target selection
+    never points at them and dispatch stops entirely when everything is
+    down (the penalized b turns positive). Processing is unaffected:
+    the simulator already zeroes a down cloud's energy budget, so its
+    fill takes nothing regardless of scores. Dead WAN routes get the
+    same treatment through the Qt term when a link view is present.
+
+With a fresh signal and no outage both adjustments are exact identities
+(V * 1.0, Qc + 0.0), so the guard is bitwise-equivalent to its inner
+policy under zero faults -- asserted in tests/test_faults.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessGuardPolicy:
+    """Wraps a DPP-family policy with staleness + outage degradation.
+
+    `stale_after`: carbon-signal age (slots) at which the carbon
+    penalty is fully distrusted (V_eff reaches 0).
+    `outage_penalty`: virtual backlog added to unavailable clouds /
+    routes; anything larger than any reachable queue length works.
+    """
+
+    inner: object
+    stale_after: int = 8
+    outage_penalty: float = 1e9
+
+    def __post_init__(self):
+        if self.stale_after <= 0:
+            raise ValueError(
+                f"stale_after={self.stale_after} must be positive "
+                "(it divides the staleness counter)"
+            )
+        if not hasattr(self.inner, "V"):
+            raise ValueError(
+                "StalenessGuardPolicy needs a drift-plus-penalty inner "
+                f"policy with a V field; got {type(self.inner).__name__}"
+            )
+
+    def __call__(
+        self,
+        state,
+        spec,
+        Ce: Array,
+        Cc: Array,
+        arrivals: Array,
+        key: Array | None = None,
+        *,
+        fault_view=None,
+        forecast: Array | None = None,
+        graph=None,
+        Qt: Array | None = None,
+    ):
+        inner = self.inner
+        if fault_view is not None:
+            s0 = jnp.asarray(float(self.stale_after), jnp.float32)
+            decay = jnp.clip(
+                1.0 - fault_view.stale.astype(jnp.float32) / s0, 0.0, 1.0
+            )
+            inner = dataclasses.replace(
+                inner, V=jnp.asarray(inner.V, jnp.float32) * decay
+            )
+            big = jnp.asarray(self.outage_penalty, jnp.float32)
+            state = state._replace(
+                Qc=state.Qc + big * (1.0 - fault_view.cloud_on)[None, :]
+            )
+            if Qt is not None and fault_view.link_on is not None:
+                Qt = Qt + big * (1.0 - fault_view.link_on)[None, :]
+        kwargs = {}
+        if forecast is not None:
+            kwargs["forecast"] = forecast
+        if graph is not None:
+            return inner(
+                state, spec, Ce, Cc, arrivals, key,
+                graph=graph, Qt=Qt, **kwargs,
+            )
+        return inner(state, spec, Ce, Cc, arrivals, key, **kwargs)

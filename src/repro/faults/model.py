@@ -1,0 +1,268 @@
+"""Fault processes for the queueing network: pure-JAX, scan-carried.
+
+Four orthogonal fault axes, each a per-slot stochastic process whose
+state threads through the simulation carry (so fleets vmap fault
+scenarios across lanes in one compiled call):
+
+  * cloud outages   -- per-cloud Markov on/off chain (p_down/p_up) plus
+    a deterministic scheduled-blackout window (sched_start/sched_len,
+    in slots) for reproducible regional-blackout experiments;
+  * brownouts       -- a second per-cloud chain that scales the cloud's
+    energy budget by `brown_floor` while active (partial capacity);
+  * link flaps      -- per-route Markov chain scaling link bandwidth by
+    `link_floor` while down (0 = hard flap), for repro.network runs;
+  * telemetry dropouts -- a scalar chain on the carbon feed: while down
+    the policy sees the LAST GOOD intensity row and an explicit
+    staleness counter; emissions are always accounted at TRUE
+    intensities (stale telemetry can mislead the policy, never the
+    ledger);
+  * task failures   -- each processed task fails with `task_p_fail` at
+    its cloud; failed work re-enters the system through a bounded
+    exponential-backoff retry pool (spent energy is charged as wasted
+    emissions by the simulator).
+
+Integral task counts are preserved by stochastic rounding:
+`floor(x + U)` with U ~ Uniform[0,1) is integral, mean-exact
+(E = x) and never exceeds the integral pool it draws from -- the same
+trick the fleet arrival draw uses.
+
+The zero-fault anchor: with `no_faults(...)` every chain stays in its
+"up" state and every mask is an exact 1.0 / +0.0, so the faulted
+simulator's arithmetic reduces to bitwise identities (x * 1.0, x + 0.0)
+and trajectories match the fault-free simulator bit-for-bit on both
+score backends (tests/test_faults.py asserts this).
+
+All carry leaves are float32 / int32 / bool (the analysis.audit carry
+discipline); every random draw pins its dtype so the x64 re-trace
+stays clean.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Salt for deriving the fault PRNG stream from the simulation key via
+# fold_in: the existing (carbon, arrival, policy) streams come from
+# jax.random.split(key, 3) and stay bit-identical whether or not faults
+# are enabled.
+FAULT_STREAM_SALT = 7
+
+
+class FaultParams(NamedTuple):
+    """Fault-process rates. A pytree of float32 arrays so fleets stack
+    it on a leading axis and vmap; the three link fields are None when
+    simulating without a LinkGraph (None is treedef, not a leaf)."""
+
+    cloud_p_down: Array   # [N] P(up -> down) per slot
+    cloud_p_up: Array     # [N] P(down -> up) per slot
+    brown_p_start: Array  # [N] P(enter brownout)
+    brown_p_end: Array    # [N] P(exit brownout)
+    brown_floor: Array    # [N] capacity factor while browned, in (0, 1]
+    sched_start: Array    # [N] scheduled blackout start slot
+    sched_len: Array      # [N] scheduled blackout length (0 = none)
+    task_p_fail: Array    # [N] per-task failure probability at cloud n
+    backoff_max: Array    # [] max retry backoff level (release ~ 2^-lvl)
+    telem_p_down: Array   # [] P(carbon feed drops)
+    telem_p_up: Array     # [] P(carbon feed recovers)
+    link_p_down: Array | None = None  # [L] P(link flaps down)
+    link_p_up: Array | None = None    # [L] P(link recovers)
+    link_floor: Array | None = None   # [L] bw factor while flapped
+
+
+class FaultState(NamedTuple):
+    """Scan-carried fault state (dtypes per the audit carry rules)."""
+
+    cloud_up: Array   # [N] bool Markov outage chain
+    browned: Array    # [N] bool brownout chain
+    telem_up: Array   # []  bool telemetry chain
+    last_row: Array   # [N+1] float32 last good intensity row
+    stale: Array      # []  int32 slots since a fresh carbon reading
+    retry: Array      # [M, N] float32 failed tasks awaiting requeue
+    backoff: Array    # [N] int32 retry backoff level
+    link_up: Array | None = None  # [L] bool link chain
+
+
+class FaultView(NamedTuple):
+    """What one slot of fault state exposes to the policy/simulator."""
+
+    obs_row: Array    # [N+1] observed (possibly stale) intensity row
+    stale: Array      # []  int32 staleness of obs_row
+    cloud_cap: Array  # [N] capacity factor (0 down, brown_floor, or 1)
+    cloud_on: Array   # [N] 1.0 where the cloud can process at all
+    released: Array   # [M, N] retry tasks re-entering Qc this slot
+    bw_scale: Array | None = None  # [L] bandwidth factor (1.0 = clean)
+    link_on: Array | None = None   # [L] 1.0 where the route is usable
+
+
+def no_faults(N: int, L: int | None = None) -> FaultParams:
+    """All rates zero, all floors 1.0: the bitwise-parity anchor."""
+    z = jnp.zeros((N,), jnp.float32)
+    o = jnp.ones((N,), jnp.float32)
+    s = jnp.zeros((), jnp.float32)
+    return FaultParams(
+        cloud_p_down=z, cloud_p_up=z,
+        brown_p_start=z, brown_p_end=z, brown_floor=o,
+        sched_start=z, sched_len=z,
+        task_p_fail=z,
+        backoff_max=jnp.asarray(6.0, jnp.float32),
+        telem_p_down=s, telem_p_up=s,
+        link_p_down=None if L is None else jnp.zeros((L,), jnp.float32),
+        link_p_up=None if L is None else jnp.zeros((L,), jnp.float32),
+        link_floor=None if L is None else jnp.ones((L,), jnp.float32),
+    )
+
+
+def make_faults(N: int, L: int | None = None, **overrides) -> FaultParams:
+    """`no_faults` with per-field overrides, scalars broadcast to the
+    field's shape -- the one constructor scenario builders and tests
+    use so shapes/dtypes can't drift."""
+    base = no_faults(N, L)
+    bad = set(overrides) - set(FaultParams._fields)
+    if bad:
+        raise ValueError(f"unknown FaultParams fields: {sorted(bad)}")
+    cast = {
+        k: jnp.broadcast_to(
+            jnp.asarray(v, jnp.float32), getattr(base, k).shape
+        )
+        for k, v in overrides.items()
+        if getattr(base, k) is not None
+    }
+    missing = [k for k in overrides if getattr(base, k) is None]
+    if missing:
+        raise ValueError(
+            f"link fault fields {missing} need L (got L=None): pass the "
+            "route count when building faults for a LinkGraph run"
+        )
+    return base._replace(**cast)
+
+
+def stack_faults(params: list) -> FaultParams:
+    """Stacks per-lane FaultParams onto a leading fleet axis (None link
+    fields must be None in every lane)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+
+
+def init_faults(M: int, N: int, L: int | None = None) -> FaultState:
+    return FaultState(
+        cloud_up=jnp.ones((N,), bool),
+        browned=jnp.zeros((N,), bool),
+        telem_up=jnp.ones((), bool),
+        last_row=jnp.zeros((N + 1,), jnp.float32),
+        stale=jnp.zeros((), jnp.int32),
+        retry=jnp.zeros((M, N), jnp.float32),
+        backoff=jnp.zeros((N,), jnp.int32),
+        link_up=None if L is None else jnp.ones((L,), bool),
+    )
+
+
+def _stoch_round(x: Array, key: Array) -> Array:
+    """Integral stochastic rounding: E[out] = x, out <= the integral
+    pool x was scaled from (U < 1 strictly)."""
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    return jnp.floor(x + u)
+
+
+def step_faults(
+    fs: FaultState,
+    fp: FaultParams,
+    t: Array,
+    key: Array,
+    true_row: Array,
+) -> Tuple[FaultState, FaultView]:
+    """Advances every fault chain one slot and builds the slot's view.
+
+    Order inside a slot: chains transition first (so a cloud that drops
+    at slot t is already unavailable to slot t's policy), telemetry
+    freezes/refreshes the observed row, then the retry pool releases
+    `floor(retry * 2^-backoff * on + U)` tasks per (type, cloud) back
+    toward Qc -- gated on the cloud being up, so a recovering cloud is
+    re-fed gradually instead of all at once. Failures from this slot's
+    processing are added afterwards by `requeue_failed`.
+    """
+    k_cloud, k_brown, k_telem, k_link, k_rel = jax.random.split(key, 5)
+    N = fp.cloud_p_down.shape[0]
+
+    u = jax.random.uniform(k_cloud, (N,), dtype=jnp.float32)
+    cloud_up = jnp.where(fs.cloud_up, u >= fp.cloud_p_down,
+                         u < fp.cloud_p_up)
+    ub = jax.random.uniform(k_brown, (N,), dtype=jnp.float32)
+    browned = jnp.where(fs.browned, ub >= fp.brown_p_end,
+                        ub < fp.brown_p_start)
+    tf = t.astype(jnp.float32)
+    sched_down = (tf >= fp.sched_start) & (
+        tf < fp.sched_start + fp.sched_len
+    )
+    cloud_cap = jnp.where(
+        sched_down | ~cloud_up,
+        0.0,
+        jnp.where(browned, fp.brown_floor, 1.0),
+    )
+    cloud_on = (cloud_cap > 0.0).astype(jnp.float32)
+
+    ut = jax.random.uniform(k_telem, (), dtype=jnp.float32)
+    telem_up = jnp.where(fs.telem_up, ut >= fp.telem_p_down,
+                         ut < fp.telem_p_up)
+    obs_row = jnp.where(telem_up, true_row, fs.last_row)
+    stale = jnp.where(telem_up, jnp.int32(0), fs.stale + 1)
+
+    if fp.link_p_down is not None:
+        L = fp.link_p_down.shape[0]
+        ul = jax.random.uniform(k_link, (L,), dtype=jnp.float32)
+        link_up = jnp.where(fs.link_up, ul >= fp.link_p_down,
+                            ul < fp.link_p_up)
+        bw_scale = jnp.where(link_up, 1.0, fp.link_floor)
+        link_on = (bw_scale > 0.0).astype(jnp.float32)
+    else:
+        link_up, bw_scale, link_on = None, None, None
+
+    rate = jnp.exp2(-fs.backoff.astype(jnp.float32))  # [N]
+    released = _stoch_round(
+        fs.retry * (rate * cloud_on)[None, :], k_rel
+    )
+
+    nxt = FaultState(
+        cloud_up=cloud_up,
+        browned=browned,
+        telem_up=telem_up,
+        last_row=obs_row,
+        stale=stale,
+        retry=fs.retry - released,
+        backoff=fs.backoff,
+        link_up=link_up,
+    )
+    view = FaultView(
+        obs_row=obs_row,
+        stale=stale,
+        cloud_cap=cloud_cap,
+        cloud_on=cloud_on,
+        released=released,
+        bw_scale=bw_scale,
+        link_on=link_on,
+    )
+    return nxt, view
+
+
+def requeue_failed(
+    fs: FaultState,
+    fp: FaultParams,
+    w_eff: Array,
+    key: Array,
+) -> Tuple[FaultState, Array]:
+    """Draws per-(type, cloud) task failures out of this slot's
+    effective processing `w_eff [M, N]`, banks them in the retry pool,
+    and moves the backoff level: up on any failure at the cloud, one
+    step down on a clean slot (bounded by `backoff_max`). Returns
+    (next state, failed [M, N])."""
+    failed = _stoch_round(w_eff * fp.task_p_fail[None, :], key)
+    fail_n = jnp.sum(failed, axis=0)
+    bmax = fp.backoff_max.astype(jnp.int32)
+    backoff = jnp.where(
+        fail_n > 0.0,
+        jnp.minimum(fs.backoff + 1, bmax),
+        jnp.maximum(fs.backoff - 1, 0),
+    )
+    return fs._replace(retry=fs.retry + failed, backoff=backoff), failed

@@ -1,0 +1,348 @@
+"""Faulted simulators: the core scan bodies with fault processes in
+the carry.
+
+`core.simulator.simulate(..., faults=...)` and
+`network.sim.simulate_network(..., faults=...)` delegate here, so every
+entry point (simulate_fleet lanes, forecaster threading, record modes)
+picks the fault layer up by passing a FaultParams. With `faults=None`
+the originals run their unchanged bodies -- and with
+`faults=no_faults(...)` these bodies reduce to bitwise identities of
+them (tests/test_faults.py asserts both, on both score backends).
+
+Slot order (the fault hooks around the fault-free order):
+
+  true carbon, arrivals
+  -> fault chains step (outages/brownouts/flaps/telemetry), retry pool
+     releases toward Qc with exponential backoff
+  -> policy acts on the OBSERVED (possibly stale) intensities, a spec
+     whose cloud budgets are scaled by the capacity factors, and a
+     `fault_view=` kwarg (base policies ignore it; StalenessGuardPolicy
+     degrades on it)
+  -> service masking: w_eff = w * cloud_on -- a hard-down cloud
+     processes nothing even if the policy scheduled it
+  -> emissions at TRUE intensities on the effective action
+  -> task failures drawn out of w_eff into the retry pool; their spent
+     energy is already in the ledger and is reported as `wasted`
+  -> queues step: Qc gains dispatches/deliveries + released retries.
+
+Conservation (per slot, exact in float32 integral counts):
+  cum(arrived) = Qe + Qc [+ Qt] + retry + cum(processed) - cum(failed)
+-- the hypothesis property in tests/test_faults_properties.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.queueing import (
+    Action,
+    NetworkSpec,
+    NetworkState,
+    emissions,
+    init_state,
+)
+from repro.core.simulator import _record_scan, init_forecaster_carry
+from repro.faults.model import (
+    FAULT_STREAM_SALT,
+    FaultParams,
+    init_faults,
+    requeue_failed,
+    step_faults,
+)
+
+Array = jax.Array
+
+
+class FaultSimResult(NamedTuple):
+    """SimResult plus the fault ledger. `processed` counts processing
+    attempts on up clouds; completed work is processed - failed.
+    `backlog` is the post-step total (Qe + Qc + retry) every slot, so
+    recovery analyses never need full queue recording."""
+
+    emissions: Array      # [T] per-slot carbon (true intensities)
+    cum_emissions: Array  # [T]
+    Qe: Array             # [R, M] edge queues (post-step)
+    Qc: Array             # [R, M, N] cloud queues (post-step)
+    retry: Array          # [R, M, N] retry pool (post-step)
+    arrived: Array        # [T] tasks arriving at the edge
+    dispatched: Array     # [T] tasks dispatched
+    processed: Array      # [T] processing attempts (post service mask)
+    energy_edge: Array    # [T]
+    energy_cloud: Array   # [T, N]
+    failed: Array         # [T] tasks failed and banked for retry
+    requeued: Array       # [T] retry tasks released back into Qc
+    wasted: Array         # [T] carbon spent on failed attempts
+    stale: Array          # [T] carbon-signal age seen by the policy
+    clouds_down: Array    # [T] clouds with zero capacity this slot
+    backlog: Array        # [T] Qe + Qc + retry totals (post-step)
+
+    @property
+    def final_backlog(self) -> Array:
+        return (
+            self.Qe[-1].sum() + self.Qc[-1].sum() + self.retry[-1].sum()
+        )
+
+
+class NetFaultSimResult(NamedTuple):
+    """NetSimResult plus the fault ledger (see FaultSimResult)."""
+
+    emissions: Array
+    cum_emissions: Array
+    Qe: Array             # [R, M]
+    Qc: Array             # [R, M, N]
+    Qt: Array             # [R, M, L]
+    retry: Array          # [R, M, N]
+    arrived: Array        # [T]
+    dispatched: Array     # [T]
+    delivered: Array      # [T]
+    processed: Array      # [T]
+    energy_edge: Array    # [T]
+    energy_transfer: Array  # [T]
+    energy_cloud: Array   # [T, N]
+    failed: Array         # [T]
+    requeued: Array       # [T]
+    wasted: Array         # [T]
+    stale: Array          # [T]
+    clouds_down: Array    # [T]
+    links_down: Array     # [T] routes with zero bandwidth this slot
+    backlog: Array        # [T] Qe + Qc + Qt + retry (post-step)
+
+    @property
+    def final_backlog(self) -> Array:
+        return (
+            self.Qe[-1].sum() + self.Qc[-1].sum()
+            + self.Qt[-1].sum() + self.retry[-1].sum()
+        )
+
+
+def simulate_faulted(
+    policy: Callable,
+    spec: NetworkSpec,
+    faults: FaultParams,
+    carbon_source: Callable,
+    arrival_source: Callable,
+    T: int,
+    key: Array,
+    state0: NetworkState | None = None,
+    forecaster: Callable | None = None,
+    error_params=None,
+    record: str | int = "full",
+) -> FaultSimResult:
+    """The link-free faulted run; see the module docstring for slot
+    order. The fault PRNG stream is `fold_in(key, FAULT_STREAM_SALT)`,
+    leaving the carbon/arrival/policy streams bit-identical to the
+    fault-free simulator's."""
+    pe, pc, Pe, Pc = spec.as_arrays()
+    if state0 is None:
+        state0 = init_state(spec.M, spec.N)
+    k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
+    k_fault = jax.random.fold_in(key, FAULT_STREAM_SALT)
+    fs0 = init_faults(spec.M, spec.N)
+
+    if forecaster is not None:
+        fcarry0 = init_forecaster_carry(
+            forecaster, spec.N, k_carbon, carbon_source, error_params
+        )
+
+    def body(carry, t):
+        state, fs, fcarry = carry
+        Ce, Cc = carbon_source(t, k_carbon)
+        a = arrival_source(t, k_arrive)
+        k_t = jax.random.fold_in(k_policy, t)
+        k_step, k_fail = jax.random.split(jax.random.fold_in(k_fault, t))
+
+        fs, view = step_faults(
+            fs, faults, t, k_step, jnp.concatenate([Ce[None], Cc])
+        )
+        spec_t = NetworkSpec(pe=pe, pc=pc, Pe=Pe, Pc=Pc * view.cloud_cap)
+        obs_Ce, obs_Cc = view.obs_row[0], view.obs_row[1:]
+        if forecaster is None:
+            act: Action = policy(
+                state, spec_t, obs_Ce, obs_Cc, a, k_t, fault_view=view
+            )
+        else:
+            # The forecaster sees what the telemetry feed delivers: the
+            # frozen row during dropouts (clairvoyant table forecasters
+            # read their table directly and stay oracle by design).
+            fcarry = forecaster.update(fcarry, view.obs_row)
+            act = policy(
+                state, spec_t, obs_Ce, obs_Cc, a, k_t, fault_view=view,
+                forecast=forecaster.predict(fcarry, t),
+            )
+        w_eff = act.w * view.cloud_on[None, :]
+        act_eff = Action(d=act.d, w=w_eff)
+        C_t = emissions(spec, act_eff, Ce, Cc)
+        fs, failed = requeue_failed(fs, faults, w_eff, k_fail)
+        d_sum = jnp.sum(act.d, axis=1)
+        nxt = NetworkState(
+            Qe=jnp.maximum(state.Qe - d_sum, 0.0) + a,
+            Qc=jnp.maximum(state.Qc - w_eff, 0.0)
+            + act.d + view.released,
+        )
+        backlog = (
+            jnp.sum(nxt.Qe) + jnp.sum(nxt.Qc) + jnp.sum(fs.retry)
+        )
+        out = (
+            C_t,
+            jnp.sum(a),
+            jnp.sum(act.d),
+            jnp.sum(w_eff),
+            jnp.sum(act.d * pe[:, None]),
+            jnp.sum(w_eff * pc, axis=0),
+            jnp.sum(failed),
+            jnp.sum(view.released),
+            jnp.sum(Cc * jnp.sum(failed * pc, axis=0)),
+            view.stale.astype(jnp.float32),
+            jnp.sum(1.0 - view.cloud_on),
+            backlog,
+        )
+        return (nxt, fs, fcarry), out
+
+    carry0 = (state0, fs0, fcarry0 if forecaster is not None else ())
+    scalars, states = _record_scan(
+        body,
+        lambda carry: (carry[0].Qe, carry[0].Qc, carry[1].retry),
+        carry0, T, record,
+    )
+    (C, arr, disp, proc, ee, ec,
+     fail, req, waste, stale, down, backlog) = scalars
+    Qe, Qc, retry = states
+    return FaultSimResult(
+        emissions=C, cum_emissions=jnp.cumsum(C),
+        Qe=Qe, Qc=Qc, retry=retry,
+        arrived=arr, dispatched=disp, processed=proc,
+        energy_edge=ee, energy_cloud=ec,
+        failed=fail, requeued=req, wasted=waste,
+        stale=stale, clouds_down=down, backlog=backlog,
+    )
+
+
+def simulate_network_faulted(
+    policy: Callable,
+    spec: NetworkSpec,
+    graph,
+    faults: FaultParams,
+    carbon_source: Callable,
+    arrival_source: Callable,
+    T: int,
+    key: Array,
+    state0: NetworkState | None = None,
+    forecaster: Callable | None = None,
+    error_params=None,
+    record: str | int = "full",
+) -> NetFaultSimResult:
+    """The WAN faulted run: link flaps scale each route's bandwidth in
+    `step_links`; everything else mirrors `simulate_faulted`."""
+    from repro.network.transfer import (
+        NetAction,
+        init_links,
+        land_in_clouds,
+        network_emissions,
+        step_links,
+        transfer_energy,
+    )
+
+    pe, pc, Pe, Pc = spec.as_arrays()
+    if state0 is None:
+        state0 = init_state(spec.M, spec.N)
+    ls0 = init_links(spec.M, graph.L)
+    k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
+    k_fault = jax.random.fold_in(key, FAULT_STREAM_SALT)
+    fs0 = init_faults(spec.M, spec.N, graph.L)
+    if faults.link_p_down is None:
+        raise ValueError(
+            "network fault runs need link fields: build the FaultParams "
+            f"with L={graph.L} (make_faults(N, L=...)) so the flap chain "
+            "matches the graph"
+        )
+
+    if forecaster is not None:
+        fcarry0 = init_forecaster_carry(
+            forecaster, spec.N, k_carbon, carbon_source, error_params
+        )
+
+    def body(carry, t):
+        state, ls, fs, fcarry = carry
+        Ce, Cc = carbon_source(t, k_carbon)
+        a = arrival_source(t, k_arrive)
+        k_t = jax.random.fold_in(k_policy, t)
+        k_step, k_fail = jax.random.split(jax.random.fold_in(k_fault, t))
+
+        fs, view = step_faults(
+            fs, faults, t, k_step, jnp.concatenate([Ce[None], Cc])
+        )
+        spec_t = NetworkSpec(pe=pe, pc=pc, Pe=Pe, Pc=Pc * view.cloud_cap)
+        obs_Ce, obs_Cc = view.obs_row[0], view.obs_row[1:]
+        if forecaster is None:
+            act: NetAction = policy(
+                state, spec_t, obs_Ce, obs_Cc, a, k_t,
+                graph=graph, Qt=ls.Qt, fault_view=view,
+            )
+        else:
+            fcarry = forecaster.update(fcarry, view.obs_row)
+            act = policy(
+                state, spec_t, obs_Ce, obs_Cc, a, k_t,
+                graph=graph, Qt=ls.Qt, fault_view=view,
+                forecast=forecaster.predict(fcarry, t),
+            )
+        w_eff = act.w * view.cloud_on[None, :]
+        act_eff = NetAction(dt=act.dt, w=w_eff)
+        C_t = network_emissions(spec, graph, act_eff, Ce, Cc)
+        ls_next, delivered = step_links(
+            ls, graph, act.dt, bw_scale=view.bw_scale
+        )
+        land = land_in_clouds(delivered, graph, spec.N)
+        fs, failed = requeue_failed(fs, faults, w_eff, k_fail)
+        d_sum = jnp.sum(act.dt, axis=1)
+        nxt = NetworkState(
+            Qe=jnp.maximum(state.Qe - d_sum, 0.0) + a,
+            Qc=jnp.maximum(state.Qc - w_eff, 0.0)
+            + land + view.released,
+        )
+        backlog = (
+            jnp.sum(nxt.Qe) + jnp.sum(nxt.Qc)
+            + jnp.sum(ls_next.Qt) + jnp.sum(fs.retry)
+        )
+        out = (
+            C_t,
+            jnp.sum(a),
+            jnp.sum(act.dt),
+            jnp.sum(delivered),
+            jnp.sum(w_eff),
+            jnp.sum(act.dt * pe[:, None]),
+            jnp.sum(transfer_energy(graph, act.dt)),
+            jnp.sum(w_eff * pc, axis=0),
+            jnp.sum(failed),
+            jnp.sum(view.released),
+            jnp.sum(Cc * jnp.sum(failed * pc, axis=0)),
+            view.stale.astype(jnp.float32),
+            jnp.sum(1.0 - view.cloud_on),
+            jnp.sum(1.0 - view.link_on),
+            backlog,
+        )
+        return (nxt, ls_next, fs, fcarry), out
+
+    carry0 = (
+        state0, ls0, fs0, fcarry0 if forecaster is not None else ()
+    )
+    scalars, states = _record_scan(
+        body,
+        lambda carry: (
+            carry[0].Qe, carry[0].Qc, carry[1].Qt, carry[2].retry
+        ),
+        carry0, T, record,
+    )
+    (C, arr, disp, deliv, proc, ee, et, ec,
+     fail, req, waste, stale, cdown, ldown, backlog) = scalars
+    Qe, Qc, Qt, retry = states
+    return NetFaultSimResult(
+        emissions=C, cum_emissions=jnp.cumsum(C),
+        Qe=Qe, Qc=Qc, Qt=Qt, retry=retry,
+        arrived=arr, dispatched=disp, delivered=deliv, processed=proc,
+        energy_edge=ee, energy_transfer=et, energy_cloud=ec,
+        failed=fail, requeued=req, wasted=waste,
+        stale=stale, clouds_down=cdown, links_down=ldown,
+        backlog=backlog,
+    )

@@ -106,8 +106,9 @@ class NetworkAwareDPPPolicy(LookaheadDPPPolicy):
         graph: LinkGraph,
         Qt: Array,
         forecast: Array | None = None,
+        fault_view=None,
     ) -> NetAction:
-        del arrivals, key
+        del arrivals, key, fault_view
         Ce_eff, Cc_eff = self.effective_intensities(Ce, Cc, forecast)
         pe, pc, Pe, Pc = spec.as_arrays()
         V = jnp.asarray(self.V, jnp.float32)
@@ -147,8 +148,9 @@ class StaticRoutePolicy:
         graph: LinkGraph,
         Qt: Array,
         forecast: Array | None = None,
+        fault_view=None,
     ) -> NetAction:
-        del Qt
+        del Qt, fault_view
         if forecast is None:
             act = self.inner(state, spec, Ce, Cc, arrivals, key)
         else:

@@ -76,6 +76,7 @@ def simulate_network(
     forecaster: Callable | None = None,
     error_params=None,
     record: str | int = "full",
+    faults=None,
 ) -> NetSimResult:
     """Runs the network + WAN for T slots under a route-aware policy.
 
@@ -87,7 +88,20 @@ def simulate_network(
     against the TRUE intensities. `record` controls the Qe/Qc/Qt
     trajectory length exactly as in `simulate` ("full" | "summary" |
     int stride); scalar series always cover all T slots.
+
+    `faults` (a repro.faults.FaultParams built with L=graph.L) routes
+    the run through the fault layer: link flaps scale each route's
+    bandwidth, cloud outages mask budgets and service, and the result
+    is a NetFaultSimResult -- see repro.faults.sim.
     """
+    if faults is not None:
+        from repro.faults.sim import simulate_network_faulted
+
+        return simulate_network_faulted(
+            policy, spec, graph, faults, carbon_source, arrival_source,
+            T, key, state0=state0, forecaster=forecaster,
+            error_params=error_params, record=record,
+        )
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
         state0 = init_state(spec.M, spec.N)

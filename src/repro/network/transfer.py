@@ -61,14 +61,23 @@ def init_links(M: int, L: int, dtype=DTYPE) -> LinkState:
 
 
 def step_links(
-    ls: LinkState, graph: LinkGraph, dt: Array
+    ls: LinkState, graph: LinkGraph, dt: Array, bw_scale: Array | None = None
 ) -> Tuple[LinkState, Array]:
     """Injects dt [M,L] new transfers, drains one slot of bandwidth,
-    returns (next state, delivered [M,L] task counts)."""
+    returns (next state, delivered [M,L] task counts).
+
+    `bw_scale` [L] (repro.faults link flaps) scales each route's
+    bandwidth for this slot. The guarded `where` keeps a hard flap
+    (scale 0) on an infinite-bandwidth route at exactly 0 instead of
+    inf * 0 = NaN; scale 1.0 is a bitwise no-op (inf * 1.0 = inf)."""
+    if bw_scale is None:
+        bw = graph.bw
+    else:
+        bw = jnp.where(bw_scale > 0.0, graph.bw * bw_scale, 0.0)
     Qt = ls.Qt + dt
     demand = Qt * graph.size[:, None] - ls.prog          # [M, L] work left
     total = jnp.sum(demand, axis=0)                      # [L]
-    ratio = jnp.minimum(1.0, graph.bw / jnp.maximum(total, _TINY))
+    ratio = jnp.minimum(1.0, bw / jnp.maximum(total, _TINY))
     prog = ls.prog + demand * ratio
     delivered = jnp.minimum(Qt, jnp.floor(prog / graph.size[:, None]))
     Qt = Qt - delivered

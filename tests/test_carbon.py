@@ -108,3 +108,42 @@ def test_constant_source():
     Ce, Cc = src(jnp.asarray(0), None)
     assert float(Ce) == 5.0
     assert np.all(np.asarray(Cc) == 7.0)
+
+
+# ------------------------------------------- construction validation
+
+
+def test_constant_source_validates_on_construction():
+    with pytest.raises(ValueError, match="N >= 1"):
+        ConstantCarbonSource(N=0)
+    with pytest.raises(ValueError, match="scalar intensity"):
+        ConstantCarbonSource(N=3, Ce=np.ones(3))
+    with pytest.raises(ValueError, match=r"\[N=3\]"):
+        ConstantCarbonSource(N=3, Cc=np.ones(4))
+    # per-cloud Cc of the right length is legal
+    src = ConstantCarbonSource(N=3, Cc=np.asarray([1.0, 2.0, 3.0]))
+    _, Cc = src(jnp.asarray(0), None)
+    np.testing.assert_array_equal(np.asarray(Cc), [1.0, 2.0, 3.0])
+
+
+def test_table_source_validates_on_construction():
+    with pytest.raises(ValueError, match="no shape"):
+        TableCarbonSource(table=[[1.0, 2.0]])  # list has no .shape
+    with pytest.raises(ValueError, match=r"\[T, N\+1\]"):
+        TableCarbonSource(table=np.ones(5, np.float32))  # 1-D
+    with pytest.raises(ValueError, match="at\n?.*least 1 row"):
+        TableCarbonSource(table=np.ones((0, 3), np.float32))
+    with pytest.raises(ValueError, match="2 columns"):
+        TableCarbonSource(table=np.ones((4, 1), np.float32))
+
+
+def test_table_source_accepts_traced_tables():
+    """simulate_fleet builds one source per vmapped lane with a TRACED
+    table slab -- shape-only validation must not read values."""
+    def f(tab):
+        src = TableCarbonSource(table=tab)
+        Ce, Cc = src(jnp.asarray(1), None)
+        return Ce + jnp.sum(Cc)
+
+    out = jax.jit(f)(jnp.ones((4, 3), jnp.float32))
+    assert float(out) == 3.0

@@ -1,0 +1,346 @@
+"""Fault-injection layer tests: the zero-fault bitwise anchor (plain /
+WAN / fleet, both score backends), guard-equals-inner parity, outage
+service masking, telemetry staleness, hard link flaps on infinite-
+bandwidth links, task-failure conservation, and the StalenessGuard
+degradation semantics (V decay + outage-aware dispatch) probed with
+hand-built FaultViews."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import fleet_scenarios
+from repro.configs.fleet_scenarios import (
+    FAULT_SCENARIOS,
+    build_fleet,
+    build_network_fleet,
+    with_faults,
+)
+from repro.core import (
+    CarbonIntensityPolicy,
+    QueueLengthPolicy,
+    RandomCarbonSource,
+    UniformArrivals,
+    simulate,
+    simulate_fleet,
+)
+from repro.faults import (
+    FaultView,
+    StalenessGuardPolicy,
+    make_faults,
+    no_faults,
+)
+from repro.network import NetworkAwareDPPPolicy, direct_graph, star_graph
+
+jax.config.update("jax_enable_x64", False)
+
+T = 48
+M, N = 4, 3
+
+
+def _setup():
+    spec = fleet_scenarios._base(M, N)
+    return (
+        spec,
+        RandomCarbonSource(N=N),
+        UniformArrivals(M=M),
+        jax.random.PRNGKey(42),
+    )
+
+
+def _assert_common_fields_equal(ref, faulted):
+    """Every field the fault-free result also has must match bitwise."""
+    for name in type(ref)._fields:
+        a = np.asarray(getattr(ref, name))
+        b = np.asarray(getattr(faulted, name))
+        np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+# ---------------------------------------------------- zero-fault anchor
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_zero_fault_bitwise_parity_plain(backend):
+    """faults=no_faults() reproduces the fault-free simulator
+    bit-for-bit: every mask is an exact 1.0/0.0 and the fault PRNG
+    stream is salted off the main key, so the arithmetic reduces to
+    identities."""
+    spec, src, arr, key = _setup()
+    interp = True if backend == "pallas" else None
+    pol = CarbonIntensityPolicy(
+        V=0.05, score_backend=backend, score_interpret=interp
+    )
+    r0 = simulate(pol, spec, src, arr, T, key)
+    r1 = simulate(pol, spec, src, arr, T, key, faults=no_faults(N))
+    _assert_common_fields_equal(r0, r1)
+    assert float(jnp.sum(r1.failed)) == 0.0
+    assert float(jnp.sum(r1.stale)) == 0.0
+    assert float(jnp.sum(r1.wasted)) == 0.0
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_zero_fault_bitwise_parity_network(backend):
+    spec, src, arr, key = _setup()
+    g = star_graph(M, N, np.random.default_rng(7))
+    interp = True if backend == "pallas" else None
+    pol = NetworkAwareDPPPolicy(
+        V=0.05, score_backend=backend, score_interpret=interp
+    )
+    r0 = simulate(pol, spec, src, arr, T, key, graph=g)
+    r1 = simulate(
+        pol, spec, src, arr, T, key, graph=g,
+        faults=no_faults(N, g.L),
+    )
+    _assert_common_fields_equal(r0, r1)
+    assert float(jnp.sum(r1.links_down)) == 0.0
+
+
+def test_zero_fault_guard_is_inner_bitwise():
+    """Fresh signal + no outage: the guard's adjustments are exact
+    identities (V * 1.0, Qc + 0.0), so guard(inner) == inner."""
+    spec, src, arr, key = _setup()
+    inner = CarbonIntensityPolicy(V=0.05)
+    fp = no_faults(N)
+    r0 = simulate(inner, spec, src, arr, T, key, faults=fp)
+    r1 = simulate(
+        StalenessGuardPolicy(inner=inner), spec, src, arr, T, key,
+        faults=fp,
+    )
+    _assert_common_fields_equal(r0, r1)
+
+
+def test_zero_fault_fleet_parity():
+    """A fleet with all-zero-rate faults matches the fault-free fleet on
+    every shared field -- simulate_fleet sweeps fault scenarios across
+    lanes in the same compiled call."""
+    from repro.faults.model import stack_faults
+
+    fleet = build_fleet(
+        ["diurnal-slack"], per_kind=2, M=M, N=N, Tc=24, seed=0
+    )
+    zeros = fleet._replace(
+        faults=stack_faults([no_faults(N)] * fleet.arrival_amax.shape[0])
+    )
+    pol = CarbonIntensityPolicy(V=0.05)
+    key = jax.random.PRNGKey(3)
+    r0 = simulate_fleet(pol, fleet, T, key)
+    r1 = simulate_fleet(pol, zeros, T, key)
+    _assert_common_fields_equal(r0, r1)
+
+
+# ------------------------------------------------------- fault dynamics
+
+
+def test_scheduled_blackout_masks_service():
+    """During the scheduled window cloud 0 spends zero energy no matter
+    what the policy wants, and the down-cloud count reflects it."""
+    spec, src, arr, key = _setup()
+    fp = make_faults(
+        N,
+        sched_start=np.array([5.0, 1e9, 1e9], np.float32),
+        sched_len=np.array([10.0, 0.0, 0.0], np.float32),
+    )
+    r = simulate(QueueLengthPolicy(), spec, src, arr, T, key, faults=fp)
+    ec = np.asarray(r.energy_cloud)
+    assert np.all(ec[5:15, 0] == 0.0)
+    down = np.asarray(r.clouds_down)
+    assert np.all(down[5:15] >= 1.0)
+    assert np.all(down[:5] == 0.0) and np.all(down[15:] == 0.0)
+
+
+def test_telemetry_dropout_freezes_view():
+    """A permanently-down feed: staleness counts 1..T and the policy
+    sees the frozen (initial) row while emissions stay on true
+    intensities (nonzero with work flowing)."""
+    spec, src, arr, key = _setup()
+    fp = make_faults(N, telem_p_down=1.0, telem_p_up=0.0)
+    r = simulate(
+        CarbonIntensityPolicy(V=0.05), spec, src, arr, T, key, faults=fp
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r.stale), np.arange(1, T + 1, dtype=np.float32)
+    )
+    assert float(jnp.sum(r.emissions)) > 0.0
+
+
+def test_hard_link_flap_no_nan_nothing_delivered():
+    """link_floor=0 on an infinite-bandwidth direct graph: the
+    inf * 0 hazard in the drain ratio must be guarded -- no NaNs, zero
+    deliveries, all links down."""
+    spec, src, arr, key = _setup()
+    g = direct_graph(M, N)
+    fp = make_faults(
+        N, g.L, link_p_down=1.0, link_p_up=0.0, link_floor=0.0
+    )
+    r = simulate(
+        NetworkAwareDPPPolicy(V=0.05), spec, src, arr, T, key,
+        graph=g, faults=fp,
+    )
+    for name in type(r)._fields:
+        assert not np.any(np.isnan(np.asarray(getattr(r, name)))), name
+    assert float(jnp.sum(r.delivered)) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(r.links_down), np.full(T, g.L, np.float32)
+    )
+
+
+def test_total_task_failure_conservation():
+    """task_p_fail=1: every processing attempt fails (integral counts
+    make the stochastic rounding exact), wasted carbon accrues, and the
+    ledger balances exactly:
+    backlog = cum(arrived) - cum(processed) + cum(failed)."""
+    spec, src, arr, key = _setup()
+    fp = make_faults(N, task_p_fail=1.0)
+    r = simulate(
+        QueueLengthPolicy(), spec, src, arr, T, key, faults=fp
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r.failed), np.asarray(r.processed)
+    )
+    assert float(jnp.sum(r.processed)) > 0.0
+    assert float(jnp.sum(r.wasted)) > 0.0
+    lhs = np.asarray(r.backlog)
+    rhs = (
+        np.cumsum(np.asarray(r.arrived))
+        - np.cumsum(np.asarray(r.processed))
+        + np.cumsum(np.asarray(r.failed))
+    )
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_retry_pool_releases_after_recovery():
+    """Failures during an early blackout re-enter the system once the
+    cloud is back: requeued > 0 and the run ends with work completed
+    (processed > failed overall)."""
+    spec, src, arr, key = _setup()
+    fp = make_faults(
+        N,
+        task_p_fail=np.array([0.5, 0.0, 0.0], np.float32),
+        sched_start=np.array([10.0, 1e9, 1e9], np.float32),
+        sched_len=np.array([6.0, 0.0, 0.0], np.float32),
+    )
+    r = simulate(
+        QueueLengthPolicy(), spec, src, arr, 96, key, faults=fp
+    )
+    assert float(jnp.sum(r.requeued)) > 0.0
+    assert float(jnp.sum(r.processed)) > float(jnp.sum(r.failed))
+
+
+# ------------------------------------------------- guard degradation
+
+
+def _fresh_view(stale=0, cloud_on=None):
+    return FaultView(
+        obs_row=jnp.zeros((N + 1,), jnp.float32),
+        stale=jnp.asarray(stale, jnp.int32),
+        cloud_cap=jnp.ones((N,), jnp.float32)
+        if cloud_on is None else jnp.asarray(cloud_on, jnp.float32),
+        cloud_on=jnp.ones((N,), jnp.float32)
+        if cloud_on is None else jnp.asarray(cloud_on, jnp.float32),
+        released=jnp.zeros((M, N), jnp.float32),
+    )
+
+
+def test_guard_fully_stale_equals_v_zero(rng):
+    """At stale >= stale_after the guard's effective V is exactly 0 --
+    actions match the inner policy with V=0 (pure backpressure)."""
+    from repro.core.queueing import NetworkState
+
+    spec = fleet_scenarios._base(M, N)
+    state = NetworkState(
+        Qe=jnp.asarray(rng.integers(1, 50, M).astype(np.float32)),
+        Qc=jnp.asarray(rng.integers(0, 50, (M, N)).astype(np.float32)),
+    )
+    Ce = jnp.float32(300.0)
+    Cc = jnp.asarray(rng.uniform(0, 700, N).astype(np.float32))
+    a = jnp.zeros((M,), jnp.float32)
+    inner = CarbonIntensityPolicy(V=0.05)
+    guard = StalenessGuardPolicy(inner=inner, stale_after=8)
+    act_g = guard(state, spec, Ce, Cc, a, fault_view=_fresh_view(stale=8))
+    act_0 = dataclasses.replace(inner, V=0.0)(state, spec, Ce, Cc, a)
+    np.testing.assert_array_equal(np.asarray(act_g.d), np.asarray(act_0.d))
+    np.testing.assert_array_equal(np.asarray(act_g.w), np.asarray(act_0.w))
+
+
+def test_guard_outage_aware_dispatch_avoids_down_cloud(rng):
+    """Cloud 0 down: the guard's virtual backlog prices it out of the
+    argmin, so no dispatch targets it even when it is the carbon-
+    cheapest target; the unguarded inner policy does dispatch to it."""
+    from repro.core.queueing import NetworkState
+
+    spec = fleet_scenarios._base(M, N)
+    state = NetworkState(
+        Qe=jnp.full((M,), 200.0, jnp.float32),
+        Qc=jnp.zeros((M, N), jnp.float32),
+    )
+    Ce = jnp.float32(600.0)
+    Cc = jnp.asarray([1.0, 500.0, 500.0], jnp.float32)  # cloud 0 cheapest
+    a = jnp.zeros((M,), jnp.float32)
+    inner = CarbonIntensityPolicy(V=0.05)
+    view = _fresh_view(cloud_on=[0.0, 1.0, 1.0])
+    act_g = StalenessGuardPolicy(inner=inner)(
+        state, spec, Ce, Cc, a, fault_view=view
+    )
+    act_i = inner(state, spec, Ce, Cc, a)
+    assert float(jnp.sum(act_g.d[:, 0])) == 0.0
+    assert float(jnp.sum(act_i.d[:, 0])) > 0.0
+    assert float(jnp.sum(act_g.d)) > 0.0  # still dispatches elsewhere
+
+
+def test_guard_all_down_stops_dispatch():
+    from repro.core.queueing import NetworkState
+
+    spec = fleet_scenarios._base(M, N)
+    state = NetworkState(
+        Qe=jnp.full((M,), 200.0, jnp.float32),
+        Qc=jnp.zeros((M, N), jnp.float32),
+    )
+    act = StalenessGuardPolicy(inner=CarbonIntensityPolicy(V=0.05))(
+        state, spec, jnp.float32(1.0),
+        jnp.asarray([1.0, 1.0, 1.0], jnp.float32),
+        jnp.zeros((M,), jnp.float32),
+        fault_view=_fresh_view(cloud_on=[0.0, 0.0, 0.0]),
+    )
+    assert float(jnp.sum(act.d)) == 0.0
+
+
+# ------------------------------------------------- constructors/config
+
+
+def test_make_faults_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown FaultParams"):
+        make_faults(N, typo_rate=0.1)
+
+
+def test_make_faults_rejects_link_fields_without_L():
+    with pytest.raises(ValueError, match="need L"):
+        make_faults(N, link_p_down=0.1)
+
+
+def test_guard_validates_construction():
+    with pytest.raises(ValueError, match="stale_after"):
+        StalenessGuardPolicy(inner=CarbonIntensityPolicy(), stale_after=0)
+    with pytest.raises(ValueError, match="V field"):
+        StalenessGuardPolicy(inner=object())
+
+
+def test_fault_scenarios_registry_builds():
+    """Every registered scenario attaches per-lane stacked FaultParams
+    to its fleet; flappy-uplink demands a WAN fleet."""
+    fleet = build_fleet(
+        ["diurnal-slack"], per_kind=2, M=M, N=N, Tc=24, seed=0
+    )
+    for kind in ("regional-blackout", "telemetry-brownout"):
+        assert kind in FAULT_SCENARIOS
+        f = with_faults(fleet, kind)
+        assert f.faults is not None
+        assert f.faults.cloud_p_down.shape == (2, N)
+    wan = build_network_fleet(
+        ["congested-uplink"], per_kind=2, M=M, N=N, Tc=24, seed=0
+    )
+    fw = with_faults(wan, "flappy-uplink")
+    assert fw.faults.link_p_down.shape[0] == 2
+    with pytest.raises(ValueError):
+        with_faults(fleet, "flappy-uplink")  # no graph -> no links

@@ -1,0 +1,108 @@
+"""Property-based fault-layer invariants (skipped cleanly when
+`hypothesis` is absent from the environment):
+
+* task conservation under ARBITRARY fault streams -- every slot,
+  cum(arrived) = Qe + Qc + retry + cum(processed) - cum(failed),
+  exact in float32 because every term is an integral count;
+* record="summary" scalar series are bitwise-equal to record="full"
+  under faults (both modes run the same scan body).
+"""
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import fleet_scenarios  # noqa: E402
+from repro.core import (  # noqa: E402
+    CarbonIntensityPolicy,
+    QueueLengthPolicy,
+    RandomCarbonSource,
+    UniformArrivals,
+    simulate,
+)
+from repro.faults import StalenessGuardPolicy, make_faults  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+T = 32
+M, N = 3, 2
+
+rate = st.floats(0.0, 1.0, allow_nan=False, width=32)
+
+
+@st.composite
+def fault_params(draw):
+    return make_faults(
+        N,
+        cloud_p_down=draw(st.floats(0.0, 0.5, width=32)),
+        cloud_p_up=draw(rate),
+        brown_p_start=draw(rate),
+        brown_p_end=draw(rate),
+        brown_floor=draw(st.floats(0.1, 1.0, width=32)),
+        task_p_fail=draw(rate),
+        telem_p_down=draw(rate),
+        telem_p_up=draw(rate),
+        backoff_max=float(draw(st.integers(0, 8))),
+    )
+
+
+def _run(fp, seed, policy=None, record="full"):
+    spec = fleet_scenarios._base(M, N)
+    return simulate(
+        policy or QueueLengthPolicy(), spec,
+        RandomCarbonSource(N=N), UniformArrivals(M=M),
+        T, jax.random.PRNGKey(seed), faults=fp, record=record,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(fp=fault_params(), seed=st.integers(0, 2**31 - 1))
+def test_task_conservation_any_fault_stream(fp, seed):
+    """No fault mix creates or destroys tasks: the running backlog
+    equals arrivals minus completed work, exactly."""
+    r = _run(fp, seed)
+    lhs = np.asarray(r.backlog)
+    rhs = (
+        np.cumsum(np.asarray(r.arrived))
+        - np.cumsum(np.asarray(r.processed))
+        + np.cumsum(np.asarray(r.failed))
+    )
+    np.testing.assert_array_equal(lhs, rhs)
+    # the recorded queues must re-sum to the same backlog at the end
+    final = (
+        float(r.Qe[-1].sum()) + float(r.Qc[-1].sum())
+        + float(r.retry[-1].sum())
+    )
+    assert final == float(lhs[-1])
+    # and nothing goes negative or NaN under any stream
+    for name in ("Qe", "Qc", "retry", "backlog"):
+        v = np.asarray(getattr(r, name))
+        assert np.all(v >= 0.0), name
+        assert not np.any(np.isnan(v)), name
+
+
+@settings(max_examples=8, deadline=None)
+@given(fp=fault_params(), seed=st.integers(0, 2**31 - 1))
+def test_summary_record_scalars_bitwise_equal_full(fp, seed):
+    """record="summary" shares the scan body with record="full", so
+    every scalar series is bitwise identical; only queue recording
+    density differs."""
+    guard = StalenessGuardPolicy(inner=CarbonIntensityPolicy(V=0.05))
+    full = _run(fp, seed, policy=guard, record="full")
+    summ = _run(fp, seed, policy=guard, record="summary")
+    for name in type(full)._fields:
+        if name in ("Qe", "Qc", "retry"):
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full, name)),
+            np.asarray(getattr(summ, name)), err_msg=name,
+        )
+    assert summ.Qe.shape[0] == 1
+    np.testing.assert_array_equal(
+        np.asarray(full.Qe[-1]), np.asarray(summ.Qe[-1])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(full.retry[-1]), np.asarray(summ.retry[-1])
+    )
