@@ -38,6 +38,13 @@ SMOKE = False
 # instances read it at call time (run.py assigns before dispatch).
 SEED = 0
 
+# row name -> repro.telemetry.manifest(...) dict. Benches that also run
+# their workload with the metrics taps on deposit the run's telemetry
+# manifest here; run.py stamps it onto the matching results.json row
+# (informational only -- --compare gates us_per_call and never fails
+# on a manifest diff).
+MANIFESTS: dict = {}
+
 
 def _timeit(fn, n=5) -> float:
     fn()  # compile
@@ -643,11 +650,22 @@ def bench_fault_robustness() -> List[Row]:
         return best * 1e6, res
 
     def measure(name, flt, policies, plain):
+        from repro.telemetry import TelemetryConfig, manifest
+
         F = flt.F
         stats = {}
         for pname, pol in policies:
             faulted = with_faults(flt, name, seed=SEED)
             us, r = run(pol, faulted)
+            # untimed taps-on rerun: deposits the run's telemetry
+            # manifest (peak backlog, waste, alert record) for run.py
+            # to stamp onto this row -- the timed runs stay taps-off so
+            # the committed us_per_call numbers keep their baseline
+            rt = jax.jit(lambda pol=pol, faulted=faulted: simulate_fleet(
+                pol, faulted, T, key, record="summary",
+                telemetry=TelemetryConfig(),
+            ))()
+            MANIFESTS[f"fault/{name}/{pname}"] = manifest(rt.telemetry)
             _, r0 = run(pol, zero_faulted(flt))
             excess = np.asarray(r.backlog) - np.asarray(r0.backlog)
             theta = 2.0 * np.asarray(r.arrived).mean()
@@ -699,6 +717,67 @@ def bench_fault_robustness() -> List[Row]:
     return rows
 
 
+def bench_telemetry_overhead() -> List[Row]:
+    """Price of observability: the same diurnal fleet with the metrics
+    taps off vs on (full Telemetry frame: every per-slot series, the
+    run gauges and all four SLO monitors), one compiled call each.
+
+    Before any timing, every non-telemetry field of the taps-on result
+    is asserted bitwise equal to the taps-off run -- the taps observe,
+    never steer, and a perturbing tap can never post a number.
+    us_per_call is per lane-slot; derived on the `on` row is the
+    overhead in % vs taps-off. Full-size runs enforce the <5% overhead
+    budget. The taps-on row's telemetry manifest is deposited in
+    MANIFESTS for run.py to stamp into results.json.
+    """
+    from repro.configs.fleet_scenarios import build_fleet
+    from repro.core import simulate_fleet
+    from repro.telemetry import TelemetryConfig, manifest
+
+    per_kind, T = (4, 48) if SMOKE else (32, 192)
+    key = jax.random.PRNGKey(SEED)
+    fleet = build_fleet(["diurnal-slack"], per_kind=per_kind, Tc=96,
+                        seed=SEED)
+    F = fleet.F
+    pol = CarbonIntensityPolicy(V=0.05)
+
+    def run(telemetry):
+        f = jax.jit(lambda: simulate_fleet(
+            pol, fleet, T, key, record="summary", telemetry=telemetry
+        ))
+        res = f()  # compile + value
+        jax.block_until_ready(res.cum_emissions)
+        best = np.inf
+        for _ in range(5):
+            t0 = time.perf_counter()
+            out = f()
+            jax.block_until_ready(out.cum_emissions)
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6, res
+
+    us_off, r_off = run(None)
+    us_on, r_on = run(TelemetryConfig())
+    for field in type(r_off)._fields:
+        if field == "telemetry":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_off, field)),
+            np.asarray(getattr(r_on, field)),
+            err_msg=f"taps perturbed the run: {field}",
+        )
+    overhead = 100.0 * (us_on / us_off - 1.0)
+    if not SMOKE:
+        assert overhead < 5.0, (
+            f"telemetry taps cost {overhead:.1f}% per lane-slot "
+            "(budget: 5%)"
+        )
+    MANIFESTS[f"telemetry/on/F{F}xT{T}"] = manifest(r_on.telemetry)
+    return [
+        (f"telemetry/off/F{F}xT{T}", us_off / (F * T), 0.0),
+        (f"telemetry/on/F{F}xT{T}", us_on / (F * T), overhead),
+    ]
+
+
 ALL_BENCHES = [
     bench_table1,
     bench_fig2_random,
@@ -713,4 +792,5 @@ ALL_BENCHES = [
     bench_forecast_lookahead,
     bench_network_routing,
     bench_fault_robustness,
+    bench_telemetry_overhead,
 ]

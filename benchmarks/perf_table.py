@@ -67,6 +67,61 @@ def render(rows) -> str:
                 f"| {r['name'].split('/')[1]} x T192 "
                 f"| {r['us_per_call']:.2f} us | {full} |"
             )
+
+    # fault-robustness rows (PR 7): one line per (scenario, policy)
+    # joining the main row (us + recovery) with its /emissions and
+    # /completed derived companions
+    faults = sorted(
+        r["name"][len("fault/"):]
+        for r in rows
+        if r["name"].startswith("fault/") and r["name"].count("/") == 2
+    )
+    if faults:
+        lines.append("")
+        lines.append(
+            "| faulted fleet | us / lane-slot | recovery (slots) "
+            "| emissions vs qlen | completed |"
+        )
+        lines.append("|---|---|---|---|---|")
+        for stem in faults:
+            main = by_name[f"fault/{stem}"]
+            em = by_name.get(f"fault/{stem}/emissions")
+            done = by_name.get(f"fault/{stem}/completed")
+            em_s = "-" if em is None else f"-{em['derived']:.1f}%"
+            done_s = "-" if done is None else f"{done['derived']:.1f}%"
+            lines.append(
+                f"| {stem} | {main['us_per_call']:.2f} us "
+                f"| {main['derived']:.1f} | {em_s} | {done_s} |"
+            )
+
+    # telemetry taps overhead (observability layer): off vs on at the
+    # same fleet size, plus the alert record the taps-on run produced
+    tel_on = [
+        r for r in rows
+        if r["name"].startswith("telemetry/on/")
+    ]
+    if tel_on:
+        lines.append("")
+        lines.append(
+            "| telemetry taps | off | on | overhead | alerts tripped |"
+        )
+        lines.append("|---|---|---|---|---|")
+        for r in sorted(tel_on, key=lambda r: r["name"]):
+            size = r["name"].split("/")[-1]
+            off = by_name.get(f"telemetry/off/{size}")
+            man = r.get("telemetry", {})
+            n_mon = len(man.get("alerts", {}))
+            tripped = sum(
+                1 for a in man.get("alerts", {}).values()
+                if a.get("tripped")
+            )
+            off_s = "-" if off is None else f"{off['us_per_call']:.2f} us"
+            lines.append(
+                f"| fleet {size} | {off_s} "
+                f"| {r['us_per_call']:.2f} us "
+                f"| {r['derived']:+.1f}% "
+                f"| {tripped}/{n_mon} monitors |"
+            )
     return "\n".join(lines)
 
 

@@ -13,6 +13,14 @@ more than ``--compare-tol`` (default 25%); rows faster than
 ``--compare-floor`` microseconds in the baseline are skipped as timer
 noise. CI's bench-smoke job runs ``--smoke --compare`` against the
 committed ``smoke/*`` baseline rows.
+
+Benches that also run their workload with the telemetry taps on
+(bench_fault_robustness, bench_telemetry_overhead) deposit a
+``repro.telemetry.manifest`` dict per row in paper_benches.MANIFESTS;
+it is stamped onto the matching results.json row under ``telemetry``.
+The manifests are informational provenance: ``--compare`` gates
+us_per_call ONLY, so a manifest-only diff (alert counts moving, peak
+backlog shifting) never fails the gate.
 """
 from __future__ import annotations
 
@@ -74,12 +82,17 @@ def main() -> None:
             print(f"{name},{us:.1f},{derived:.4f}")
         # bench_wall_s = total wall time of the bench FUNCTION that
         # produced the row (shared by its rows) -- compare like-named
-        # benches across PRs, not rows within one bench
-        all_rows.extend(
-            {"name": n, "us_per_call": float(u), "derived": float(d),
-             "bench_wall_s": round(wall_s, 3), **env}
-            for n, u, d in rows
-        )
+        # benches across PRs, not rows within one bench. Telemetry
+        # manifests are keyed by the unprefixed name (deposited before
+        # the smoke/ prefix lands).
+        for n, u, d in rows:
+            bare = n[len("smoke/"):] if n.startswith("smoke/") else n
+            row = {"name": n, "us_per_call": float(u),
+                   "derived": float(d),
+                   "bench_wall_s": round(wall_s, 3), **env}
+            if bare in paper_benches.MANIFESTS:
+                row["telemetry"] = paper_benches.MANIFESTS[bare]
+            all_rows.append(row)
 
     # roofline rows come from dry-run artifacts when present
     try:

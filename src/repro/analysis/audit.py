@@ -82,6 +82,7 @@ class Combo(NamedTuple):
     forecaster: object
     fleet: object          # FleetScenario
     record: object         # "full" | "summary" | int stride
+    telemetry: object = None  # TelemetryConfig | None (jit static)
 
 
 # ---------------------------------------------------------------------------
@@ -235,6 +236,42 @@ def iter_combos(per_kind: int = AUDIT_PER_KIND) -> List[Combo]:
             make_policy=make, forecaster=None, fleet=fleet,
             record=record,
         ))
+
+    # Telemetry-on combos (repro.telemetry): taps put TapState in the
+    # carry and a stacked TapSeries on the output path -- all four
+    # simulator variants must stay effect-free, 32-bit and re-trace
+    # clean with the extra accumulators threaded through. Covers both
+    # score backends, the record modes, the WAN path and guard+faults.
+    from repro.telemetry import TelemetryConfig
+
+    tcfg = TelemetryConfig()
+    telemetry_combos = [
+        ("ci/reference", lambda: CarbonIntensityPolicy(),
+         "diurnal-slack+taps", base, "full"),
+        ("ci/pallas",
+         lambda: CarbonIntensityPolicy(score_backend="pallas"),
+         "diurnal-slack+taps", base, "full"),
+        ("ci/reference", lambda: CarbonIntensityPolicy(),
+         "diurnal-slack+taps/summary", base, "summary"),
+        ("ci/reference", lambda: CarbonIntensityPolicy(),
+         "diurnal-slack+taps/stride", base, 2),
+        ("aware/reference", lambda: NetworkAwareDPPPolicy(),
+         "congested-uplink+taps", wan_fleets["congested-uplink"],
+         "full"),
+        ("guard-ci/reference",
+         lambda: StalenessGuardPolicy(CarbonIntensityPolicy()),
+         "telemetry-brownout+taps", brownout, "full"),
+        ("guard-aware/reference",
+         lambda: StalenessGuardPolicy(NetworkAwareDPPPolicy()),
+         "flappy-uplink+taps", flappy, "full"),
+    ]
+    for policy_key, make, scen, fleet, record in telemetry_combos:
+        combos.append(Combo(
+            name=f"{policy_key}@{scen}",
+            policy_key=policy_key, scenario=scen,
+            make_policy=make, forecaster=None, fleet=fleet,
+            record=record, telemetry=tcfg,
+        ))
     return combos
 
 
@@ -248,6 +285,7 @@ def _combo_fn(combo: Combo) -> Callable:
         return simulate_fleet(
             policy, fleet, AUDIT_T, key,
             forecaster=combo.forecaster, record=combo.record,
+            telemetry=combo.telemetry,
         )
 
     return run
@@ -454,8 +492,10 @@ def retrace_audit(combos: List[Combo] | None = None
                 "unequal object: every construction would recompile",
             ))
         args = (combo.fleet, jax.random.PRNGKey(0))
-        # record/forecaster are part of the static closure -> the key
-        static = f"{combo.record}|{combo.forecaster!r}"
+        # record/forecaster/telemetry are static closure -> the key
+        static = (
+            f"{combo.record}|{combo.forecaster!r}|{combo.telemetry!r}"
+        )
         full = _signature(args) + f"|{static}"
         shape = _signature(args, shapes_only=True) + f"|{static}"
         slot = table.setdefault(combo.policy_key, {}).setdefault(
@@ -498,7 +538,8 @@ def audit_all(per_kind: int = AUDIT_PER_KIND,
         for combo in combos:
             k = (combo.policy_key,
                  _signature((combo.fleet,), shapes_only=True),
-                 str(combo.record), repr(combo.forecaster))
+                 str(combo.record), repr(combo.forecaster),
+                 repr(combo.telemetry))
             if k not in seen:
                 seen.add(k)
                 rep.append(combo)

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.core import dpp
 from repro.core.queueing import Action, NetworkSpec, NetworkState
+from repro.telemetry.profile import phase
 
 Array = jax.Array
 
@@ -91,6 +92,22 @@ def greedy_fill(
     Caps are treated as integer-valued (queue lengths); the budget walk
     takes cap items whenever floor(P/e) >= cap.
     """
+    # The phase scope is profiler metadata only (repro.telemetry
+    # §profiling): it labels the fill ops in xprof/Perfetto traces and
+    # never changes the computation.
+    with phase("greedy_fill"):
+        return _greedy_fill(
+            scores, unit_energy, max_items, budget,
+            stop_at_first_unfit=stop_at_first_unfit,
+            literal_edge_budget=literal_edge_budget,
+            sort_key=sort_key, chunk=chunk,
+        )
+
+
+def _greedy_fill(
+    scores, unit_energy, max_items, budget, *,
+    stop_at_first_unfit, literal_edge_budget, sort_key, chunk,
+):
     scores = jnp.asarray(scores)
     single = scores.ndim == 1
     if single:
@@ -242,27 +259,31 @@ class CarbonIntensityPolicy:
         return counts[0], counts[1:].T
 
     def _scores(self, state, pe, pc, Ce, Cc, V):
-        """Score pass: (c [M,N], n1 [M], b [M]) via the selected backend."""
-        if self.score_backend == "pallas":
-            from repro.kernels import ops
+        """Score pass: (c [M,N], n1 [M], b [M]) via the selected backend.
+        The phase scope labels it in profiler traces (metadata only)."""
+        with phase("policy_score"):
+            if self.score_backend == "pallas":
+                from repro.kernels import ops
 
-            # The kernel contract takes pre-scaled intensities: V*Cc for
-            # the c-matrix and V*Ce for the b-vector (same op order as
-            # the reference, so results agree bitwise under jit).
-            return ops.carbon_scores(
-                state.Qc, pc, state.Qe, pe, V * Cc, V * Ce,
-                block_m=self.score_block_m, block_n=self.score_block_n,
-                interpret=self.score_interpret,
-            )
-        if self.score_backend != "reference":
-            raise ValueError(
-                f"unknown score_backend {self.score_backend!r}"
-            )
-        from repro.kernels import ref
+                # The kernel contract takes pre-scaled intensities:
+                # V*Cc for the c-matrix and V*Ce for the b-vector (same
+                # op order as the reference, so results agree bitwise
+                # under jit).
+                return ops.carbon_scores(
+                    state.Qc, pc, state.Qe, pe, V * Cc, V * Ce,
+                    block_m=self.score_block_m,
+                    block_n=self.score_block_n,
+                    interpret=self.score_interpret,
+                )
+            if self.score_backend != "reference":
+                raise ValueError(
+                    f"unknown score_backend {self.score_backend!r}"
+                )
+            from repro.kernels import ref
 
-        return ref.carbon_scores_ref(
-            state.Qc, pc, state.Qe, pe, V * Cc, V * Ce
-        )
+            return ref.carbon_scores_ref(
+                state.Qc, pc, state.Qe, pe, V * Cc, V * Ce
+            )
 
     def __call__(
         self,

@@ -23,6 +23,12 @@ from repro.core.queueing import (
     init_state,
     step,
 )
+from repro.telemetry.taps import (
+    TelemetryProbe,
+    finalize_taps,
+    init_taps,
+    step_taps,
+)
 
 Array = jax.Array
 
@@ -92,6 +98,7 @@ class SimResult(NamedTuple):
     processed: Array      # [T] total tasks processed
     energy_edge: Array    # [T] edge energy spent
     energy_cloud: Array   # [T, N] cloud energy spent
+    telemetry: object = None  # repro.telemetry.Telemetry frame, or None
 
     # R depends on the `record` mode: T for "full" (every slot), 1 for
     # "summary" (final state only), T//k for stride k (state at the end
@@ -168,6 +175,7 @@ def simulate(
     error_params=None,
     record: str | int = "full",
     faults=None,
+    telemetry=None,
 ) -> SimResult:
     """Runs the network for T slots under `policy`.
 
@@ -210,6 +218,15 @@ def simulate(
     `fault_view=` kwarg, and the result is a FaultSimResult. With
     `faults=None` this body is untouched, and with all fault rates zero
     the faulted body is bitwise-identical to it (tests/test_faults.py).
+
+    `telemetry` (a repro.telemetry.TelemetryConfig, trace-time static)
+    turns on the in-scan metrics taps and SLO monitors: the result's
+    `.telemetry` field then carries a Telemetry frame of per-slot
+    series, run gauges, and structured alert records (DESIGN.md
+    §Observability). With `telemetry=None` the tap carry is `()` (zero
+    pytree leaves) and the run is bit-identical to a build without the
+    telemetry layer -- a standing parity anchor
+    (tests/test_telemetry.py, asserted again before bench timing).
     """
     if graph is not None:
         from repro.network.sim import simulate_network
@@ -218,6 +235,7 @@ def simulate(
             policy, spec, graph, carbon_source, arrival_source, T, key,
             state0=state0, forecaster=forecaster,
             error_params=error_params, record=record, faults=faults,
+            telemetry=telemetry,
         )
     if faults is not None:
         from repro.faults.sim import simulate_faulted
@@ -226,6 +244,7 @@ def simulate(
             policy, spec, faults, carbon_source, arrival_source, T, key,
             state0=state0, forecaster=forecaster,
             error_params=error_params, record=record,
+            telemetry=telemetry,
         )
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
@@ -238,7 +257,7 @@ def simulate(
         )
 
     def body(carry, t):
-        state, fcarry = carry
+        state, fcarry, tap = carry
         Ce, Cc = carbon_source(t, k_carbon)
         a = arrival_source(t, k_arrive)
         k_t = jax.random.fold_in(k_policy, t)
@@ -261,12 +280,37 @@ def simulate(
             jnp.sum(act.d * pe[:, None]),
             jnp.sum(act.w * pc, axis=0),
         )
-        return (nxt, fcarry), out
+        if telemetry is None:
+            return (nxt, fcarry, tap), out
+        probe = TelemetryProbe(
+            emissions=C_t,
+            arrived=jnp.sum(a),
+            dispatched=jnp.sum(act.d, axis=0),
+            processed=jnp.sum(act.w),
+            failed=jnp.float32(0.0),
+            wasted=jnp.float32(0.0),
+            backlog=jnp.sum(nxt.Qe) + jnp.sum(nxt.Qc),
+            stale=jnp.int32(0),
+            clouds_down=jnp.float32(0.0),
+            retry_depth=jnp.float32(0.0),
+            transfer_occupancy=jnp.float32(0.0),
+        )
+        tap, tseries = step_taps(telemetry, tap, probe)
+        return (nxt, fcarry, tap), (out, tseries)
 
-    carry0 = (state0, fcarry0 if forecaster is not None else ())
-    (C, disp, proc, ee, ec), (Qe, Qc) = _record_scan(
+    carry0 = (
+        state0,
+        fcarry0 if forecaster is not None else (),
+        init_taps() if telemetry is not None else (),
+    )
+    scalars, (Qe, Qc) = _record_scan(
         body, lambda carry: (carry[0].Qe, carry[0].Qc), carry0, T, record
     )
+    if telemetry is None:
+        (C, disp, proc, ee, ec), tel = scalars, None
+    else:
+        (C, disp, proc, ee, ec), tseries = scalars
+        tel = finalize_taps(telemetry, tseries)
     return SimResult(
         emissions=C,
         cum_emissions=jnp.cumsum(C),
@@ -276,6 +320,7 @@ def simulate(
         processed=proc,
         energy_edge=ee,
         energy_cloud=ec,
+        telemetry=tel,
     )
 
 
@@ -404,6 +449,7 @@ def simulate_fleet(
     key: Array,
     forecaster: Callable | None = None,
     record: str | int = "full",
+    telemetry=None,
 ) -> SimResult:
     """Runs F independent network instances for T slots in ONE compiled
     call: the full `simulate` scan is vmapped over the stacked
@@ -420,6 +466,11 @@ def simulate_fleet(
     fleet memory scales as O(F * T * M * N); `record="summary"` keeps
     only per-slot scalars plus the final state ([F, 1, M] / [F, 1, M, N])
     -- the mode that unlocks F >= 512 lanes in one compiled call.
+
+    `telemetry` threads to every lane: the result's `.telemetry` frame
+    carries a leading [F] axis on every field (select one lane with
+    `repro.telemetry.lane`, or reduce the fleet with
+    `repro.telemetry.manifest`).
     """
     F = fleet.F
     M = fleet.arrival_amax.shape[1]
@@ -440,7 +491,7 @@ def simulate_fleet(
         return simulate(
             policy, spec, carbon_source, arrival_source, T, k,
             forecaster=forecaster, graph=graph, error_params=err,
-            record=record, faults=faults,
+            record=record, faults=faults, telemetry=telemetry,
         )
 
     err = (

@@ -43,6 +43,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.telemetry.profile import phase
+
 Array = jax.Array
 
 # Salt for deriving the fault PRNG stream from the simulation key via
@@ -182,7 +184,15 @@ def step_faults(
     toward Qc -- gated on the cloud being up, so a recovering cloud is
     re-fed gradually instead of all at once. Failures from this slot's
     processing are added afterwards by `requeue_failed`.
+
+    The phase scope labels the fault step in profiler traces
+    (repro.telemetry §profiling, metadata only).
     """
+    with phase("fault_step"):
+        return _step_faults(fs, fp, t, key, true_row)
+
+
+def _step_faults(fs, fp, t, key, true_row):
     k_cloud, k_brown, k_telem, k_link, k_rel = jax.random.split(key, 5)
     N = fp.cloud_p_down.shape[0]
 
@@ -257,12 +267,16 @@ def requeue_failed(
     and moves the backoff level: up on any failure at the cloud, one
     step down on a clean slot (bounded by `backoff_max`). Returns
     (next state, failed [M, N])."""
-    failed = _stoch_round(w_eff * fp.task_p_fail[None, :], key)
-    fail_n = jnp.sum(failed, axis=0)
-    bmax = fp.backoff_max.astype(jnp.int32)
-    backoff = jnp.where(
-        fail_n > 0.0,
-        jnp.minimum(fs.backoff + 1, bmax),
-        jnp.maximum(fs.backoff - 1, 0),
-    )
-    return fs._replace(retry=fs.retry + failed, backoff=backoff), failed
+    with phase("fault_retry"):
+        failed = _stoch_round(w_eff * fp.task_p_fail[None, :], key)
+        fail_n = jnp.sum(failed, axis=0)
+        bmax = fp.backoff_max.astype(jnp.int32)
+        backoff = jnp.where(
+            fail_n > 0.0,
+            jnp.minimum(fs.backoff + 1, bmax),
+            jnp.maximum(fs.backoff - 1, 0),
+        )
+        return (
+            fs._replace(retry=fs.retry + failed, backoff=backoff),
+            failed,
+        )

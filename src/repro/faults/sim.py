@@ -51,6 +51,12 @@ from repro.faults.model import (
     requeue_failed,
     step_faults,
 )
+from repro.telemetry.taps import (
+    TelemetryProbe,
+    finalize_taps,
+    init_taps,
+    step_taps,
+)
 
 Array = jax.Array
 
@@ -77,6 +83,7 @@ class FaultSimResult(NamedTuple):
     stale: Array          # [T] carbon-signal age seen by the policy
     clouds_down: Array    # [T] clouds with zero capacity this slot
     backlog: Array        # [T] Qe + Qc + retry totals (post-step)
+    telemetry: object = None  # repro.telemetry.Telemetry frame, or None
 
     @property
     def final_backlog(self) -> Array:
@@ -108,6 +115,7 @@ class NetFaultSimResult(NamedTuple):
     clouds_down: Array    # [T]
     links_down: Array     # [T] routes with zero bandwidth this slot
     backlog: Array        # [T] Qe + Qc + Qt + retry (post-step)
+    telemetry: object = None  # repro.telemetry.Telemetry frame, or None
 
     @property
     def final_backlog(self) -> Array:
@@ -129,6 +137,7 @@ def simulate_faulted(
     forecaster: Callable | None = None,
     error_params=None,
     record: str | int = "full",
+    telemetry=None,
 ) -> FaultSimResult:
     """The link-free faulted run; see the module docstring for slot
     order. The fault PRNG stream is `fold_in(key, FAULT_STREAM_SALT)`,
@@ -147,7 +156,7 @@ def simulate_faulted(
         )
 
     def body(carry, t):
-        state, fs, fcarry = carry
+        state, fs, fcarry, tap = carry
         Ce, Cc = carbon_source(t, k_carbon)
         a = arrival_source(t, k_arrive)
         k_t = jax.random.fold_in(k_policy, t)
@@ -184,6 +193,7 @@ def simulate_faulted(
         backlog = (
             jnp.sum(nxt.Qe) + jnp.sum(nxt.Qc) + jnp.sum(fs.retry)
         )
+        wasted = jnp.sum(Cc * jnp.sum(failed * pc, axis=0))
         out = (
             C_t,
             jnp.sum(a),
@@ -193,19 +203,44 @@ def simulate_faulted(
             jnp.sum(w_eff * pc, axis=0),
             jnp.sum(failed),
             jnp.sum(view.released),
-            jnp.sum(Cc * jnp.sum(failed * pc, axis=0)),
+            wasted,
             view.stale.astype(jnp.float32),
             jnp.sum(1.0 - view.cloud_on),
             backlog,
         )
-        return (nxt, fs, fcarry), out
+        if telemetry is None:
+            return (nxt, fs, fcarry, tap), out
+        probe = TelemetryProbe(
+            emissions=C_t,
+            arrived=jnp.sum(a),
+            dispatched=jnp.sum(act.d, axis=0),
+            processed=jnp.sum(w_eff),
+            failed=jnp.sum(failed),
+            wasted=wasted,
+            backlog=backlog,
+            stale=view.stale,
+            clouds_down=jnp.sum(1.0 - view.cloud_on),
+            retry_depth=jnp.sum(fs.retry),
+            transfer_occupancy=jnp.float32(0.0),
+        )
+        tap, tseries = step_taps(telemetry, tap, probe)
+        return (nxt, fs, fcarry, tap), (out, tseries)
 
-    carry0 = (state0, fs0, fcarry0 if forecaster is not None else ())
+    carry0 = (
+        state0, fs0,
+        fcarry0 if forecaster is not None else (),
+        init_taps() if telemetry is not None else (),
+    )
     scalars, states = _record_scan(
         body,
         lambda carry: (carry[0].Qe, carry[0].Qc, carry[1].retry),
         carry0, T, record,
     )
+    if telemetry is None:
+        tel = None
+    else:
+        scalars, tseries = scalars
+        tel = finalize_taps(telemetry, tseries)
     (C, arr, disp, proc, ee, ec,
      fail, req, waste, stale, down, backlog) = scalars
     Qe, Qc, retry = states
@@ -216,6 +251,7 @@ def simulate_faulted(
         energy_edge=ee, energy_cloud=ec,
         failed=fail, requeued=req, wasted=waste,
         stale=stale, clouds_down=down, backlog=backlog,
+        telemetry=tel,
     )
 
 
@@ -232,6 +268,7 @@ def simulate_network_faulted(
     forecaster: Callable | None = None,
     error_params=None,
     record: str | int = "full",
+    telemetry=None,
 ) -> NetFaultSimResult:
     """The WAN faulted run: link flaps scale each route's bandwidth in
     `step_links`; everything else mirrors `simulate_faulted`."""
@@ -264,7 +301,7 @@ def simulate_network_faulted(
         )
 
     def body(carry, t):
-        state, ls, fs, fcarry = carry
+        state, ls, fs, fcarry, tap = carry
         Ce, Cc = carbon_source(t, k_carbon)
         a = arrival_source(t, k_arrive)
         k_t = jax.random.fold_in(k_policy, t)
@@ -305,6 +342,7 @@ def simulate_network_faulted(
             jnp.sum(nxt.Qe) + jnp.sum(nxt.Qc)
             + jnp.sum(ls_next.Qt) + jnp.sum(fs.retry)
         )
+        wasted = jnp.sum(Cc * jnp.sum(failed * pc, axis=0))
         out = (
             C_t,
             jnp.sum(a),
@@ -316,16 +354,34 @@ def simulate_network_faulted(
             jnp.sum(w_eff * pc, axis=0),
             jnp.sum(failed),
             jnp.sum(view.released),
-            jnp.sum(Cc * jnp.sum(failed * pc, axis=0)),
+            wasted,
             view.stale.astype(jnp.float32),
             jnp.sum(1.0 - view.cloud_on),
             jnp.sum(1.0 - view.link_on),
             backlog,
         )
-        return (nxt, ls_next, fs, fcarry), out
+        if telemetry is None:
+            return (nxt, ls_next, fs, fcarry, tap), out
+        probe = TelemetryProbe(
+            emissions=C_t,
+            arrived=jnp.sum(a),
+            dispatched=jnp.sum(land, axis=0),
+            processed=jnp.sum(w_eff),
+            failed=jnp.sum(failed),
+            wasted=wasted,
+            backlog=backlog,
+            stale=view.stale,
+            clouds_down=jnp.sum(1.0 - view.cloud_on),
+            retry_depth=jnp.sum(fs.retry),
+            transfer_occupancy=jnp.sum(ls_next.Qt),
+        )
+        tap, tseries = step_taps(telemetry, tap, probe)
+        return (nxt, ls_next, fs, fcarry, tap), (out, tseries)
 
     carry0 = (
-        state0, ls0, fs0, fcarry0 if forecaster is not None else ()
+        state0, ls0, fs0,
+        fcarry0 if forecaster is not None else (),
+        init_taps() if telemetry is not None else (),
     )
     scalars, states = _record_scan(
         body,
@@ -334,6 +390,11 @@ def simulate_network_faulted(
         ),
         carry0, T, record,
     )
+    if telemetry is None:
+        tel = None
+    else:
+        scalars, tseries = scalars
+        tel = finalize_taps(telemetry, tseries)
     (C, arr, disp, deliv, proc, ee, et, ec,
      fail, req, waste, stale, cdown, ldown, backlog) = scalars
     Qe, Qc, Qt, retry = states
@@ -345,4 +406,5 @@ def simulate_network_faulted(
         failed=fail, requeued=req, wasted=waste,
         stale=stale, clouds_down=cdown, links_down=ldown,
         backlog=backlog,
+        telemetry=tel,
     )

@@ -39,6 +39,7 @@ from repro.core.policies import LookaheadDPPPolicy
 from repro.core.queueing import NetworkSpec, NetworkState
 from repro.network.graph import LinkGraph
 from repro.network.transfer import NetAction
+from repro.telemetry.profile import phase
 
 Array = jax.Array
 
@@ -64,35 +65,38 @@ class NetworkAwareDPPPolicy(LookaheadDPPPolicy):
 
     def _route_scores(self, state, Qt, graph, pe, pc, Ce, Cc, V):
         """Score pass over the route lattice via the selected backend:
-        (rc [M,L], l1 [M], b [M])."""
-        row = jnp.concatenate([Ce[None], Cc])             # [N+1]
-        VCt = V * row[graph.region]                       # [L]
-        Qcr = jnp.take(state.Qc, graph.dest, axis=1)      # [M, L]
-        if self.route_compute_weight:
-            pcr = jnp.take(pc, graph.dest, axis=1)
-            extra = (
-                jnp.asarray(self.route_compute_weight, jnp.float32)
-                * (V * Cc)[graph.dest][None, :] * pcr
-            )
-        else:
-            extra = jnp.zeros_like(Qcr)
-        if self.score_backend == "pallas":
-            from repro.kernels import ops
+        (rc [M,L], l1 [M], b [M]). The phase scope labels it in
+        profiler traces (metadata only)."""
+        with phase("route_score"):
+            row = jnp.concatenate([Ce[None], Cc])         # [N+1]
+            VCt = V * row[graph.region]                   # [L]
+            Qcr = jnp.take(state.Qc, graph.dest, axis=1)  # [M, L]
+            if self.route_compute_weight:
+                pcr = jnp.take(pc, graph.dest, axis=1)
+                extra = (
+                    jnp.asarray(self.route_compute_weight, jnp.float32)
+                    * (V * Cc)[graph.dest][None, :] * pcr
+                )
+            else:
+                extra = jnp.zeros_like(Qcr)
+            if self.score_backend == "pallas":
+                from repro.kernels import ops
 
-            return ops.route_scores(
-                Qt, graph.pt, Qcr, extra, state.Qe, pe, VCt, V * Ce,
-                block_m=self.score_block_m, block_l=self.score_block_n,
-                interpret=self.score_interpret,
-            )
-        if self.score_backend != "reference":
-            raise ValueError(
-                f"unknown score_backend {self.score_backend!r}"
-            )
-        from repro.kernels import ref
+                return ops.route_scores(
+                    Qt, graph.pt, Qcr, extra, state.Qe, pe, VCt,
+                    V * Ce, block_m=self.score_block_m,
+                    block_l=self.score_block_n,
+                    interpret=self.score_interpret,
+                )
+            if self.score_backend != "reference":
+                raise ValueError(
+                    f"unknown score_backend {self.score_backend!r}"
+                )
+            from repro.kernels import ref
 
-        return ref.route_scores_ref(
-            Qt, graph.pt, Qcr, extra, state.Qe, pe, VCt, V * Ce
-        )
+            return ref.route_scores_ref(
+                Qt, graph.pt, Qcr, extra, state.Qe, pe, VCt, V * Ce
+            )
 
     def __call__(
         self,

@@ -37,6 +37,12 @@ from repro.network.transfer import (
     step_links,
     transfer_energy,
 )
+from repro.telemetry.taps import (
+    TelemetryProbe,
+    finalize_taps,
+    init_taps,
+    step_taps,
+)
 
 Array = jax.Array
 
@@ -53,6 +59,7 @@ class NetSimResult(NamedTuple):
     energy_edge: Array      # [T] edge dispatch energy
     energy_transfer: Array  # [T] WAN transfer energy
     energy_cloud: Array     # [T, N] cloud compute energy
+    telemetry: object = None  # repro.telemetry.Telemetry frame, or None
 
     # R depends on the `record` mode exactly as in SimResult: T for
     # "full", 1 for "summary", T//k for stride k.
@@ -77,6 +84,7 @@ def simulate_network(
     error_params=None,
     record: str | int = "full",
     faults=None,
+    telemetry=None,
 ) -> NetSimResult:
     """Runs the network + WAN for T slots under a route-aware policy.
 
@@ -93,6 +101,12 @@ def simulate_network(
     the run through the fault layer: link flaps scale each route's
     bandwidth, cloud outages mask budgets and service, and the result
     is a NetFaultSimResult -- see repro.faults.sim.
+
+    `telemetry` behaves as in `core.simulator.simulate`: taps-on runs
+    fill the result's `.telemetry` frame (here `transfer_occupancy`
+    tracks the in-flight Qt total and `dispatched_cloud` counts
+    LANDINGS per cloud, not link injections); `telemetry=None` runs are
+    bit-identical to a build without the telemetry layer.
     """
     if faults is not None:
         from repro.faults.sim import simulate_network_faulted
@@ -101,6 +115,7 @@ def simulate_network(
             policy, spec, graph, faults, carbon_source, arrival_source,
             T, key, state0=state0, forecaster=forecaster,
             error_params=error_params, record=record,
+            telemetry=telemetry,
         )
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
@@ -114,7 +129,7 @@ def simulate_network(
         )
 
     def body(carry, t):
-        state, ls, fcarry = carry
+        state, ls, fcarry, tap = carry
         Ce, Cc = carbon_source(t, k_carbon)
         a = arrival_source(t, k_arrive)
         k_t = jax.random.fold_in(k_policy, t)
@@ -147,13 +162,39 @@ def simulate_network(
             jnp.sum(transfer_energy(graph, act.dt)),
             jnp.sum(act.w * pc, axis=0),
         )
-        return (nxt, ls_next, fcarry), out
+        if telemetry is None:
+            return (nxt, ls_next, fcarry, tap), out
+        probe = TelemetryProbe(
+            emissions=C_t,
+            arrived=jnp.sum(a),
+            dispatched=jnp.sum(land, axis=0),
+            processed=jnp.sum(act.w),
+            failed=jnp.float32(0.0),
+            wasted=jnp.float32(0.0),
+            backlog=jnp.sum(nxt.Qe) + jnp.sum(nxt.Qc)
+            + jnp.sum(ls_next.Qt),
+            stale=jnp.int32(0),
+            clouds_down=jnp.float32(0.0),
+            retry_depth=jnp.float32(0.0),
+            transfer_occupancy=jnp.sum(ls_next.Qt),
+        )
+        tap, tseries = step_taps(telemetry, tap, probe)
+        return (nxt, ls_next, fcarry, tap), (out, tseries)
 
-    carry0 = (state0, ls0, fcarry0 if forecaster is not None else ())
-    (C, disp, deliv, proc, ee, et, ec), (Qe, Qc, Qt) = _record_scan(
+    carry0 = (
+        state0, ls0,
+        fcarry0 if forecaster is not None else (),
+        init_taps() if telemetry is not None else (),
+    )
+    scalars, (Qe, Qc, Qt) = _record_scan(
         body, lambda carry: (carry[0].Qe, carry[0].Qc, carry[1].Qt),
         carry0, T, record,
     )
+    if telemetry is None:
+        (C, disp, deliv, proc, ee, et, ec), tel = scalars, None
+    else:
+        (C, disp, deliv, proc, ee, et, ec), tseries = scalars
+        tel = finalize_taps(telemetry, tseries)
     return NetSimResult(
         emissions=C,
         cum_emissions=jnp.cumsum(C),
@@ -166,4 +207,5 @@ def simulate_network(
         energy_edge=ee,
         energy_transfer=et,
         energy_cloud=ec,
+        telemetry=tel,
     )

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from repro.core.queueing import DTYPE, NetworkSpec, edge_energy
 
 from repro.network.graph import LinkGraph
+from repro.telemetry.profile import phase
 
 Array = jax.Array
 
@@ -69,20 +70,36 @@ def step_links(
     `bw_scale` [L] (repro.faults link flaps) scales each route's
     bandwidth for this slot. The guarded `where` keeps a hard flap
     (scale 0) on an infinite-bandwidth route at exactly 0 instead of
-    inf * 0 = NaN; scale 1.0 is a bitwise no-op (inf * 1.0 = inf)."""
-    if bw_scale is None:
-        bw = graph.bw
-    else:
-        bw = jnp.where(bw_scale > 0.0, graph.bw * bw_scale, 0.0)
-    Qt = ls.Qt + dt
-    demand = Qt * graph.size[:, None] - ls.prog          # [M, L] work left
-    total = jnp.sum(demand, axis=0)                      # [L]
-    ratio = jnp.minimum(1.0, bw / jnp.maximum(total, _TINY))
-    prog = ls.prog + demand * ratio
-    delivered = jnp.minimum(Qt, jnp.floor(prog / graph.size[:, None]))
-    Qt = Qt - delivered
-    prog = prog - delivered * graph.size[:, None]
-    return LinkState(Qt=Qt, prog=prog), delivered
+    inf * 0 = NaN; scale 1.0 is a bitwise no-op (inf * 1.0 = inf).
+
+    The phase scope labels the link step in profiler traces
+    (repro.telemetry §profiling, metadata only)."""
+    with phase("transfer_step"):
+        if bw_scale is None:
+            bw = graph.bw
+        else:
+            bw = jnp.where(bw_scale > 0.0, graph.bw * bw_scale, 0.0)
+        Qt = ls.Qt + dt
+        demand = Qt * graph.size[:, None] - ls.prog      # [M, L] work left
+        total = jnp.sum(demand, axis=0)                  # [L]
+        ratio = jnp.minimum(1.0, bw / jnp.maximum(total, _TINY))
+        prog = ls.prog + demand * ratio
+        # Clamp at 0 on both sides of the delivery: cancellation in
+        # `prog - delivered*size` can leave prog at -eps, and
+        # floor(-eps/size) = -1 would then "deliver" a NEGATIVE task --
+        # un-delivering work onto an empty route and driving Qc below
+        # zero (the telemetry conservation monitor caught exactly this
+        # leak). Where prog >= 0 both clamps are exact no-ops, so the
+        # direct-graph parity anchor is untouched.
+        delivered = jnp.minimum(
+            Qt,
+            jnp.maximum(jnp.floor(prog / graph.size[:, None]), 0.0),
+        )
+        Qt = Qt - delivered
+        prog = jnp.maximum(
+            prog - delivered * graph.size[:, None], 0.0
+        )
+        return LinkState(Qt=Qt, prog=prog), delivered
 
 
 def land_in_clouds(delivered: Array, graph: LinkGraph, N: int) -> Array:

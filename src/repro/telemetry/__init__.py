@@ -1,0 +1,66 @@
+"""Telemetry: in-scan metrics taps, phase annotation, SLO monitors,
+and host-side exporters (DESIGN.md §Observability).
+
+Turn it on by passing `telemetry=TelemetryConfig()` to any simulator
+(`simulate`, `simulate_network`, `simulate_faulted`,
+`simulate_network_faulted`, `simulate_fleet`); the result's
+`.telemetry` field then carries a `Telemetry` frame of per-slot series,
+run gauges, and structured alert records. `telemetry=None` (the
+default) is bit-identical to a build without this package.
+"""
+from repro.telemetry.export import (
+    manifest,
+    oracle_gap_series,
+    to_chrome_trace,
+    to_jsonl,
+    to_prometheus,
+    validate_chrome_trace,
+    validate_dir,
+    validate_jsonl,
+    validate_prometheus,
+    write_run,
+)
+from repro.telemetry.monitors import MONITORS, monitor_conditions
+from repro.telemetry.profile import PHASES, phase, trace_to
+from repro.telemetry.taps import (
+    METRICS,
+    MetricSpec,
+    TapSeries,
+    TapState,
+    Telemetry,
+    TelemetryConfig,
+    TelemetryProbe,
+    finalize_taps,
+    init_taps,
+    lane,
+    step_taps,
+)
+
+__all__ = [
+    "MONITORS",
+    "METRICS",
+    "PHASES",
+    "MetricSpec",
+    "TapSeries",
+    "TapState",
+    "Telemetry",
+    "TelemetryConfig",
+    "TelemetryProbe",
+    "finalize_taps",
+    "init_taps",
+    "lane",
+    "manifest",
+    "monitor_conditions",
+    "oracle_gap_series",
+    "phase",
+    "step_taps",
+    "to_chrome_trace",
+    "to_jsonl",
+    "to_prometheus",
+    "trace_to",
+    "validate_chrome_trace",
+    "validate_dir",
+    "validate_jsonl",
+    "validate_prometheus",
+    "write_run",
+]

@@ -1,0 +1,325 @@
+"""Host-side exporters for recorded Telemetry frames.
+
+Everything here runs AFTER the compiled call returns (plain
+numpy/json on concrete arrays) -- by design there is no io_callback in
+the traced program, so the audit's effect-freedom gate stays meaningful
+and the exporters can never perturb a run (DESIGN.md §Observability).
+
+Three wire formats, each with a parse-checking validator the tests and
+the CI telemetry-smoke job run against real output:
+
+* Prometheus text exposition (`to_prometheus`): run-end counters and
+  gauges, alert state labelled by monitor, per-cloud dispatch labelled
+  by cloud.
+* JSON-lines events (`to_jsonl`): one `slot` event per slot, one
+  `alert` event per tripped monitor, one terminal `summary` event.
+* Chrome trace (`to_chrome_trace`): counter tracks for every scalar
+  series plus duration events for alert windows -- load in Perfetto /
+  chrome://tracing next to a `profile.trace_to` dump.
+
+Fleet frames ([F, ...] leaves) reduce through `manifest`; the
+per-slot exporters take a single lane (`taps.lane(frame, i)`).
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+import numpy as np
+
+from repro.telemetry.monitors import MONITORS
+from repro.telemetry.taps import METRICS, Telemetry
+
+# Scalar per-slot series exported as event fields / counter tracks.
+_SCALAR_SERIES = tuple(
+    m.field for m in METRICS
+    if m.kind == "series" and m.field != "dispatched_cloud"
+)
+_COUNTERS = tuple(m for m in METRICS if m.kind == "counter")
+_GAUGES = tuple(m for m in METRICS if m.kind == "gauge")
+
+
+def _require_lane(frame: Telemetry) -> None:
+    if np.asarray(frame.peak_backlog).ndim != 0:
+        raise ValueError(
+            "fleet frame: per-slot exporters take one lane -- select it "
+            "with repro.telemetry.lane(frame, i), or reduce the whole "
+            "fleet with repro.telemetry.manifest(frame)"
+        )
+
+
+def _prom_name(spec) -> str:
+    # Prometheus counters end in _total by convention.
+    if spec.kind == "counter":
+        return "repro_" + spec.field.replace("total_", "") + "_total"
+    return "repro_" + spec.field
+
+
+def to_prometheus(frame: Telemetry) -> str:
+    """Prometheus text exposition of the run-end state: counters,
+    gauges, the final value of every scalar series, per-cloud dispatch
+    totals, and the alert records labelled by monitor."""
+    _require_lane(frame)
+    lines = []
+
+    def emit(name, kind, help_, samples):
+        lines.append(f"# HELP {name} {help_}")
+        lines.append(f"# TYPE {name} {kind}")
+        for labels, value in samples:
+            lines.append(f"{name}{labels} {value:.10g}")
+
+    for spec in _COUNTERS + _GAUGES:
+        kind = "counter" if spec.kind == "counter" else "gauge"
+        v = float(np.asarray(getattr(frame, spec.field)))
+        emit(_prom_name(spec), kind, f"{spec.help} ({spec.unit})",
+             [("", v)])
+    for field in _SCALAR_SERIES:
+        spec = next(m for m in METRICS if m.field == field)
+        v = float(np.asarray(getattr(frame, field))[-1])
+        emit(_prom_name(spec) + "_last", "gauge",
+             f"final-slot {spec.help} ({spec.unit})", [("", v)])
+    disp = np.asarray(frame.dispatched_cloud).sum(axis=0)
+    emit("repro_dispatched_cloud_total", "counter",
+         "tasks landed per cloud queue (tasks)",
+         [(f'{{cloud="{n}"}}', float(disp[n]))
+          for n in range(disp.shape[0])])
+    for name, help_ in (
+        ("repro_alert_tripped", "monitor fired at least once (bool)"),
+        ("repro_alert_first_slot", "first firing slot (-1 = never)"),
+        ("repro_alert_count", "number of firing slots"),
+    ):
+        arr = np.asarray(getattr(frame, name.replace("repro_", "")))
+        emit(name, "gauge", help_,
+             [(f'{{monitor="{mon}"}}', float(arr[k]))
+              for k, mon in enumerate(MONITORS)])
+    return "\n".join(lines) + "\n"
+
+
+def to_jsonl(frame: Telemetry) -> str:
+    """JSON-lines event stream: `slot` events (one per slot, every
+    scalar series plus the per-cloud dispatch vector), `alert` events
+    for tripped monitors, and a terminal `summary` event."""
+    _require_lane(frame)
+    series = {f: np.asarray(getattr(frame, f)) for f in _SCALAR_SERIES}
+    disp = np.asarray(frame.dispatched_cloud)
+    active = np.asarray(frame.alert_active)
+    T = disp.shape[0]
+    out = []
+    for t in range(T):
+        ev = {"event": "slot", "t": t}
+        for f, arr in series.items():
+            ev[f] = float(arr[t])
+        ev["dispatched_cloud"] = [float(x) for x in disp[t]]
+        ev["alerts_active"] = [
+            mon for k, mon in enumerate(MONITORS) if active[t, k]
+        ]
+        out.append(json.dumps(ev))
+    tripped = np.asarray(frame.alert_tripped)
+    first = np.asarray(frame.alert_first_slot)
+    count = np.asarray(frame.alert_count)
+    for k, mon in enumerate(MONITORS):
+        if tripped[k]:
+            out.append(json.dumps({
+                "event": "alert", "monitor": mon,
+                "first_slot": int(first[k]),
+                "slots_active": int(count[k]),
+            }))
+    summary = {"event": "summary"}
+    for spec in _COUNTERS + _GAUGES:
+        summary[spec.field] = float(np.asarray(getattr(frame, spec.field)))
+    out.append(json.dumps(summary))
+    return "\n".join(out) + "\n"
+
+
+def to_chrome_trace(frame: Telemetry, slot_us: float = 1000.0) -> str:
+    """Chrome trace-event JSON: one counter track per scalar series
+    (ph="C") and one duration event per contiguous alert window
+    (ph="X"), slot t at timestamp t*slot_us. Loads in Perfetto /
+    chrome://tracing."""
+    _require_lane(frame)
+    events = [
+        {"name": "process_name", "ph": "M", "pid": 0,
+         "args": {"name": "repro.telemetry"}},
+        {"name": "thread_name", "ph": "M", "pid": 0, "tid": 0,
+         "args": {"name": "series"}},
+        {"name": "thread_name", "ph": "M", "pid": 0, "tid": 1,
+         "args": {"name": "alerts"}},
+    ]
+    for field in _SCALAR_SERIES:
+        arr = np.asarray(getattr(frame, field))
+        for t in range(arr.shape[0]):
+            events.append({
+                "name": field, "ph": "C", "pid": 0, "tid": 0,
+                "ts": t * slot_us, "args": {field: float(arr[t])},
+            })
+    active = np.asarray(frame.alert_active)
+    for k, mon in enumerate(MONITORS):
+        col = active[:, k]
+        t = 0
+        while t < col.shape[0]:
+            if col[t]:
+                start = t
+                while t < col.shape[0] and col[t]:
+                    t += 1
+                events.append({
+                    "name": f"alert:{mon}", "ph": "X", "cat": "alert",
+                    "pid": 0, "tid": 1, "ts": start * slot_us,
+                    "dur": (t - start) * slot_us,
+                })
+            else:
+                t += 1
+    return json.dumps(
+        {"traceEvents": events, "displayTimeUnit": "ms"}
+    )
+
+
+def manifest(frame: Telemetry) -> dict:
+    """Reduces a Telemetry frame (single-lane or fleet) to the plain
+    JSON manifest the bench rows carry: peak backlog (max over lanes),
+    emission/waste/failure totals (summed over lanes), and per-monitor
+    alert records (lanes tripped, firing-slot total, earliest
+    first-trip slot across lanes)."""
+    K = len(MONITORS)
+    out = {
+        "peak_backlog": float(np.max(np.asarray(frame.peak_backlog))),
+        "total_emissions": float(
+            np.sum(np.asarray(frame.total_emissions))
+        ),
+        "total_wasted": float(np.sum(np.asarray(frame.total_wasted))),
+        "total_failed": float(np.sum(np.asarray(frame.total_failed))),
+        "alerts": {},
+    }
+    tripped = np.asarray(frame.alert_tripped).reshape(-1, K)
+    first = np.asarray(frame.alert_first_slot).reshape(-1, K)
+    count = np.asarray(frame.alert_count).reshape(-1, K)
+    for k, mon in enumerate(MONITORS):
+        fs = first[:, k][first[:, k] >= 0]
+        out["alerts"][mon] = {
+            "tripped": int(tripped[:, k].sum()),
+            "slots_active": int(count[:, k].sum()),
+            "first_slot": int(fs.min()) if fs.size else -1,
+        }
+    return out
+
+
+def oracle_gap_series(result, carbon_table, horizon=None):
+    """Per-slot clairvoyant re-pricing of the run's energy profile:
+    returns `(oracle_rate [T], gap [T])` float32 where `gap` is the
+    realized per-slot emissions minus the windowed-min repriced cost of
+    the same energy (the per-slot refinement of
+    `core.extensions.oracle_emissions_horizon`: `oracle_rate.sum()`
+    equals that bound on the tiled table). For WAN results the transfer
+    term stays in `gap` un-repriced -- the oracle covers edge + cloud
+    energy only. Host-side numpy on a finished result, like the oracle
+    bounds themselves.
+    """
+    em = np.asarray(result.emissions, np.float64)
+    T = em.shape[0]
+    ci = np.asarray(carbon_table, np.float64)
+    ci = ci[np.arange(T) % ci.shape[0]]
+    H = T if horizon is None else int(min(max(horizon, 1), T))
+    wmin = ci.copy()
+    for h in range(1, H):
+        np.minimum(wmin, np.roll(ci, -h, axis=0), out=wmin)
+    ee = np.asarray(result.energy_edge, np.float64).reshape(T)
+    ec = np.asarray(result.energy_cloud, np.float64).reshape(T, -1)
+    oracle = ee * wmin[:, 0] + (ec * wmin[:, 1:]).sum(axis=1)
+    return oracle.astype(np.float32), (em - oracle).astype(np.float32)
+
+
+def write_run(frame: Telemetry, outdir, stem: str = "run") -> dict:
+    """Writes all three wire formats for one lane; returns the paths."""
+    outdir = Path(outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    paths = {
+        "prometheus": outdir / f"{stem}.prom",
+        "jsonl": outdir / f"{stem}.jsonl",
+        "chrome_trace": outdir / f"{stem}.trace.json",
+    }
+    paths["prometheus"].write_text(to_prometheus(frame))
+    paths["jsonl"].write_text(to_jsonl(frame))
+    paths["chrome_trace"].write_text(to_chrome_trace(frame))
+    return paths
+
+
+_PROM_SAMPLE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})?\s+[-+]?"
+    r"([0-9]*\.?[0-9]+([eE][-+]?[0-9]+)?|[Nn]a[Nn]|[Ii]nf)$"
+)
+
+
+def validate_prometheus(text: str) -> int:
+    """Parse-checks Prometheus text exposition; returns sample count."""
+    samples = 0
+    typed = set()
+    for i, line in enumerate(text.splitlines()):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) < 4 or parts[1] not in ("HELP", "TYPE"):
+                raise ValueError(f"bad comment line {i + 1}: {line!r}")
+            if parts[1] == "TYPE":
+                typed.add(parts[2])
+            continue
+        if not _PROM_SAMPLE.match(line):
+            raise ValueError(f"bad sample line {i + 1}: {line!r}")
+        name = line.split("{")[0].split()[0]
+        if name not in typed:
+            raise ValueError(f"sample before TYPE for {name!r}")
+        samples += 1
+    if samples == 0:
+        raise ValueError("no samples")
+    return samples
+
+
+def validate_jsonl(text: str) -> int:
+    """Parse-checks a JSON-lines event stream; returns event count."""
+    events = 0
+    kinds = set()
+    for i, line in enumerate(text.splitlines()):
+        if not line.strip():
+            continue
+        ev = json.loads(line)
+        if "event" not in ev:
+            raise ValueError(f"line {i + 1} missing 'event' field")
+        kinds.add(ev["event"])
+        events += 1
+    if "slot" not in kinds or "summary" not in kinds:
+        raise ValueError(f"missing slot/summary events (saw {kinds})")
+    return events
+
+
+def validate_chrome_trace(text: str) -> int:
+    """Parse-checks Chrome trace-event JSON; returns event count."""
+    doc = json.loads(text)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        raise ValueError("traceEvents missing or empty")
+    for i, ev in enumerate(events):
+        if "ph" not in ev or "name" not in ev:
+            raise ValueError(f"event {i} missing ph/name: {ev!r}")
+        if ev["ph"] in ("C", "X") and "ts" not in ev:
+            raise ValueError(f"event {i} missing ts: {ev!r}")
+    return len(events)
+
+
+def validate_dir(outdir) -> dict:
+    """Validates every telemetry file under `outdir` (the CI
+    telemetry-smoke gate); requires at least one file of each format.
+    Returns {path: event/sample count}."""
+    outdir = Path(outdir)
+    checks = {
+        "*.prom": validate_prometheus,
+        "*.jsonl": validate_jsonl,
+        "*.trace.json": validate_chrome_trace,
+    }
+    out = {}
+    for pattern, fn in checks.items():
+        paths = sorted(outdir.glob(pattern))
+        if not paths:
+            raise ValueError(f"no {pattern} files under {outdir}")
+        for p in paths:
+            out[str(p)] = fn(p.read_text())
+    return out

@@ -1,0 +1,54 @@
+"""In-scan SLO health monitors.
+
+Each monitor is a per-slot threshold condition evaluated INSIDE the
+scan body on the current `TelemetryProbe` (plus the small carried tap
+state) -- no host callback ever fires. The [K] int32 activity vector is
+emitted as a per-slot series; `finalize_taps` reduces the stacked
+[T, K] matrix into structured alert records (tripped flag, first-trip
+slot index, active-slot count) after the compiled call returns.
+
+The registry order is the alert axis: `Telemetry.alert_active[:, k]`,
+`alert_first_slot[k]` etc. all index `MONITORS[k]`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Alert axis. Keep descriptions in sync with DESIGN.md §Observability.
+MONITORS = (
+    # backlog grew by more than growth_thresh for growth_sustain
+    # consecutive slots: the system is losing the stability race.
+    "backlog_growth",
+    # the carbon signal the policy acts on is older than stale_budget
+    # slots (beyond what StalenessGuardPolicy is tuned to absorb).
+    "signal_staleness",
+    # every cloud reports zero capacity: nothing the policy dispatches
+    # can be serviced this slot.
+    "all_clouds_down",
+    # the flow-conservation residual
+    #   cum(arrived) - (backlog + cum(processed) - cum(failed))
+    # left the +/- drift_tol band: the ledger is leaking tasks.
+    "conservation_drift",
+)
+K = len(MONITORS)
+
+
+def monitor_conditions(cfg, probe, growth_run: Array,
+                       residual: Array) -> Array:
+    """[K] int32 vector of per-slot alert conditions (1 = firing).
+
+    `growth_run` is the carried count of consecutive growth slots
+    (already including this slot); `residual` the carried conservation
+    residual after this slot. Everything else comes off the probe.
+    """
+    n_clouds = probe.dispatched.shape[0]
+    conds = (
+        growth_run >= cfg.growth_sustain,
+        probe.stale > cfg.stale_budget,
+        probe.clouds_down >= jnp.float32(n_clouds),
+        jnp.abs(residual) > cfg.drift_tol,
+    )
+    return jnp.stack([c.astype(jnp.int32) for c in conds])

@@ -1,0 +1,46 @@
+"""Phase annotation for xprof / Perfetto traces.
+
+`phase("policy_score")` is a thin wrapper around `jax.named_scope`: it
+attaches a `repro.<name>/` prefix to every HLO op traced under it, so a
+profiler timeline (``jax.profiler.trace`` + xprof, or a Perfetto dump)
+shows the simulator's slot anatomy -- policy-score, greedy-fill,
+transfer-step, fault-step -- instead of a wall of fused ops. Scopes are
+metadata only: they never change the computation, so every bit-parity
+anchor in the test suite holds with them in place.
+
+The canonical phase names live in `PHASES` so dashboards and trace
+post-processors can rely on them.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+# The slot anatomy, in execution order. Keep in sync with the scopes
+# placed in core/policies.py, network/transfer.py and faults/model.py.
+PHASES = (
+    "policy_score",   # DPP score tables (reference or pallas backend)
+    "route_score",    # WAN (type, route, cloud) score tables
+    "greedy_fill",    # chunked top_k budget fill
+    "transfer_step",  # link injection / drain / delivery
+    "fault_step",     # fault chain transitions + observation masking
+    "fault_retry",    # failure draws + retry-pool backoff
+)
+
+
+def phase(name: str):
+    """Context manager labelling ops traced inside it as `repro.<name>`."""
+    return jax.named_scope(f"repro.{name}")
+
+
+@contextlib.contextmanager
+def trace_to(logdir: str):
+    """Host-side convenience: records a `jax.profiler` trace (viewable
+    in xprof/TensorBoard or as a Perfetto dump) for the enclosed block.
+    Purely host-side -- never call under jit."""
+    jax.profiler.start_trace(logdir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

@@ -1,0 +1,300 @@
+"""Metrics taps: the in-scan telemetry state machine.
+
+Design constraints (the audit enforces all of them):
+
+* pure JAX, no host callbacks -- every metric is either a per-slot
+  scan output (`TapSeries`) or a scan-carried f32/int32 accumulator
+  (`TapState`); export happens host-side after the compiled call.
+* `telemetry=None` runs are bit-identical to pre-telemetry simulators:
+  the tap carry element is `()` (zero pytree leaves) and the scan body
+  is untouched, so the jaxpr is the same program.
+* record-mode independence: `TapSeries` rides the scalar output path of
+  `_record_scan`, which is identical in "full" / "summary" / stride
+  mode, so the whole `Telemetry` frame is bitwise-equal across modes.
+
+Per-simulator wiring: each scan body builds a `TelemetryProbe` from
+values it already computes (fields that do not apply are pinned zeros
+-- e.g. `retry_depth` in the fault-free simulators), calls
+`step_taps`, and appends the returned `TapSeries` to its outputs;
+`finalize_taps` turns the stacked series into the `Telemetry` frame
+attached to the result's `telemetry` field.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.telemetry.monitors import MONITORS, monitor_conditions
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Monitor thresholds. Frozen + hashable: the config is a static
+    (trace-time) value -- close over it or mark it static under jit;
+    two configs hash equal iff they trace the same program.
+
+    growth_thresh   backlog delta per slot that counts as "growing"
+    growth_sustain  consecutive growing slots before the alert trips
+    stale_budget    carbon-signal age (slots) the run tolerates
+    drift_tol       |conservation residual| tolerance (tasks)
+    """
+
+    growth_thresh: float = 0.0
+    growth_sustain: int = 8
+    stale_budget: int = 4
+    drift_tol: float = 0.5
+
+
+class TelemetryProbe(NamedTuple):
+    """What one slot exposes to the taps. Scalars f32 unless noted;
+    simulators pin fields that do not apply to `jnp.float32(0.0)` /
+    `jnp.int32(0)` so dtype discipline holds across all bodies."""
+
+    emissions: Array           # C(t) at true intensities
+    arrived: Array             # tasks arriving at the edge
+    dispatched: Array          # [N] tasks landing in each cloud queue
+    processed: Array           # processing attempts (post service mask)
+    failed: Array              # attempts failed into the retry pool
+    wasted: Array              # carbon spent on failed attempts
+    backlog: Array             # post-step Qe+Qc[+Qt][+retry] total
+    stale: Array               # int32 carbon-signal age seen by policy
+    clouds_down: Array         # clouds at zero capacity this slot
+    retry_depth: Array         # retry-pool total (post-step)
+    transfer_occupancy: Array  # in-flight transfer queue total
+
+
+class TapState(NamedTuple):
+    """The scan-carried accumulators (f32/int32 scalars only)."""
+
+    prev_backlog: Array   # f32, for the growth-rate series
+    growth_run: Array     # int32 consecutive-growth counter
+    cum_arrived: Array    # f32 running totals for the
+    cum_processed: Array  # f32   conservation residual
+    cum_failed: Array     # f32
+
+
+class TapSeries(NamedTuple):
+    """Per-slot tap outputs (stacked to [T, ...] by the scan)."""
+
+    emission_rate: Array          # f32
+    arrived: Array                # f32
+    dispatched_cloud: Array       # [N] f32
+    processed: Array              # f32
+    failed: Array                 # f32
+    wasted: Array                 # f32
+    backlog: Array                # f32
+    backlog_growth: Array         # f32 backlog delta vs previous slot
+    staleness: Array              # int32
+    clouds_down: Array            # f32
+    retry_depth: Array            # f32
+    transfer_occupancy: Array     # f32
+    conservation_residual: Array  # f32
+    alert_active: Array           # [K] int32, axis = monitors.MONITORS
+
+
+class Telemetry(NamedTuple):
+    """The exported frame: `TapSeries` stacked over T plus run-level
+    gauges/counters and the structured alert records. Under
+    `simulate_fleet` every field carries a leading [F] axis (see
+    `lane`)."""
+
+    # per-slot series [T, ...]
+    emission_rate: Array
+    arrived: Array
+    dispatched_cloud: Array       # [T, N]
+    processed: Array
+    failed: Array
+    wasted: Array
+    backlog: Array
+    backlog_growth: Array
+    staleness: Array              # [T] int32
+    clouds_down: Array
+    retry_depth: Array
+    transfer_occupancy: Array
+    conservation_residual: Array
+    alert_active: Array           # [T, K] int32
+    # run gauges / counters (f32 scalars)
+    peak_backlog: Array
+    total_emissions: Array
+    total_arrived: Array
+    total_processed: Array
+    total_failed: Array
+    total_wasted: Array
+    # structured alert records ([K] int32, axis = monitors.MONITORS)
+    alert_tripped: Array
+    alert_first_slot: Array       # first firing slot, -1 = never
+    alert_count: Array            # number of firing slots
+
+
+def init_taps() -> TapState:
+    return TapState(
+        prev_backlog=jnp.float32(0.0),
+        growth_run=jnp.int32(0),
+        cum_arrived=jnp.float32(0.0),
+        cum_processed=jnp.float32(0.0),
+        cum_failed=jnp.float32(0.0),
+    )
+
+
+def step_taps(cfg: TelemetryConfig, tap: TapState,
+              probe: TelemetryProbe) -> tuple:
+    """One slot of tap accounting: (TapState, TapSeries)."""
+    growth = probe.backlog - tap.prev_backlog
+    growth_run = jnp.where(
+        growth > cfg.growth_thresh,
+        tap.growth_run + jnp.int32(1),
+        jnp.int32(0),
+    )
+    cum_arrived = tap.cum_arrived + probe.arrived
+    cum_processed = tap.cum_processed + probe.processed
+    cum_failed = tap.cum_failed + probe.failed
+    residual = cum_arrived - (
+        probe.backlog + cum_processed - cum_failed
+    )
+    active = monitor_conditions(cfg, probe, growth_run, residual)
+    nxt = TapState(
+        prev_backlog=probe.backlog,
+        growth_run=growth_run,
+        cum_arrived=cum_arrived,
+        cum_processed=cum_processed,
+        cum_failed=cum_failed,
+    )
+    series = TapSeries(
+        emission_rate=probe.emissions,
+        arrived=probe.arrived,
+        dispatched_cloud=probe.dispatched,
+        processed=probe.processed,
+        failed=probe.failed,
+        wasted=probe.wasted,
+        backlog=probe.backlog,
+        backlog_growth=growth,
+        staleness=probe.stale,
+        clouds_down=probe.clouds_down,
+        retry_depth=probe.retry_depth,
+        transfer_occupancy=probe.transfer_occupancy,
+        conservation_residual=residual,
+        alert_active=active,
+    )
+    return nxt, series
+
+
+def finalize_taps(cfg: TelemetryConfig, series: TapSeries) -> Telemetry:
+    """Reduces the stacked [T, ...] series into the Telemetry frame.
+
+    Pure functions of the series (which `_record_scan` records
+    identically in every mode), so the frame is bitwise-equal across
+    "full" / "summary" / stride runs. Reductions pin int32 explicitly:
+    under the audit's x64 re-trace, integer sums/argmax default to
+    64-bit otherwise.
+    """
+    active = series.alert_active                      # [T, K] int32
+    count = jnp.sum(active, axis=0).astype(jnp.int32)
+    tripped = (count > 0).astype(jnp.int32)
+    first = jnp.where(
+        count > 0,
+        jnp.argmax(active, axis=0).astype(jnp.int32),
+        jnp.int32(-1),
+    )
+    return Telemetry(
+        emission_rate=series.emission_rate,
+        arrived=series.arrived,
+        dispatched_cloud=series.dispatched_cloud,
+        processed=series.processed,
+        failed=series.failed,
+        wasted=series.wasted,
+        backlog=series.backlog,
+        backlog_growth=series.backlog_growth,
+        staleness=series.staleness,
+        clouds_down=series.clouds_down,
+        retry_depth=series.retry_depth,
+        transfer_occupancy=series.transfer_occupancy,
+        conservation_residual=series.conservation_residual,
+        alert_active=active,
+        peak_backlog=jnp.max(series.backlog),
+        total_emissions=jnp.sum(series.emission_rate),
+        total_arrived=jnp.sum(series.arrived),
+        total_processed=jnp.sum(series.processed),
+        total_failed=jnp.sum(series.failed),
+        total_wasted=jnp.sum(series.wasted),
+        alert_tripped=tripped,
+        alert_first_slot=first,
+        alert_count=count,
+    )
+
+
+def lane(frame: Telemetry, i: int) -> Telemetry:
+    """Selects lane i of a fleet Telemetry frame ([F, ...] -> [...])."""
+    return jax.tree.map(lambda x: x[i], frame)
+
+
+class MetricSpec(NamedTuple):
+    """Registry row: how a Telemetry field exports."""
+
+    field: str  # Telemetry field name
+    kind: str   # "series" | "gauge" | "counter"
+    unit: str
+    help: str
+
+
+# The typed registry the exporters iterate. Alert fields are exported
+# separately (one labelled metric per monitor in MONITORS).
+METRICS = (
+    MetricSpec("emission_rate", "series", "gCO2/slot",
+               "per-slot carbon emissions at true intensities"),
+    MetricSpec("arrived", "series", "tasks/slot",
+               "tasks arriving at the edge"),
+    MetricSpec("dispatched_cloud", "series", "tasks/slot",
+               "tasks landing in each cloud queue"),
+    MetricSpec("processed", "series", "tasks/slot",
+               "processing attempts (post service mask)"),
+    MetricSpec("failed", "series", "tasks/slot",
+               "attempts failed into the retry pool"),
+    MetricSpec("wasted", "series", "gCO2/slot",
+               "carbon spent on failed attempts"),
+    MetricSpec("backlog", "series", "tasks",
+               "post-step total backlog Qe+Qc[+Qt][+retry]"),
+    MetricSpec("backlog_growth", "series", "tasks/slot",
+               "backlog delta vs previous slot"),
+    MetricSpec("staleness", "series", "slots",
+               "carbon-signal age seen by the policy"),
+    MetricSpec("clouds_down", "series", "clouds",
+               "clouds at zero capacity"),
+    MetricSpec("retry_depth", "series", "tasks",
+               "retry-pool total"),
+    MetricSpec("transfer_occupancy", "series", "tasks",
+               "in-flight WAN transfer total"),
+    MetricSpec("conservation_residual", "series", "tasks",
+               "flow-conservation residual (should be ~0)"),
+    MetricSpec("peak_backlog", "gauge", "tasks",
+               "max backlog over the run"),
+    MetricSpec("total_emissions", "counter", "gCO2",
+               "cumulative carbon over the run"),
+    MetricSpec("total_arrived", "counter", "tasks",
+               "tasks arrived over the run"),
+    MetricSpec("total_processed", "counter", "tasks",
+               "processing attempts over the run"),
+    MetricSpec("total_failed", "counter", "tasks",
+               "failed attempts over the run"),
+    MetricSpec("total_wasted", "counter", "gCO2",
+               "carbon wasted on failed attempts over the run"),
+)
+
+__all__ = [
+    "MONITORS",
+    "METRICS",
+    "MetricSpec",
+    "TelemetryConfig",
+    "TelemetryProbe",
+    "TapState",
+    "TapSeries",
+    "Telemetry",
+    "init_taps",
+    "step_taps",
+    "finalize_taps",
+    "lane",
+]

@@ -60,6 +60,17 @@ def _assert_disciplined(res, label):
     assert fields, f"{label}: result is not a NamedTuple"
     for field in fields:
         leaf = getattr(res, field)
+        if field == "telemetry":
+            # Off by default in these runs; when a frame is attached
+            # its leaves obey the same discipline (recurse below).
+            if leaf is None:
+                continue
+            for path, sub in jax.tree_util.tree_flatten_with_path(leaf)[0]:
+                dtype = str(sub.dtype)
+                assert dtype in ALLOWED, (
+                    f"{label}: telemetry leaf {path} is {dtype}"
+                )
+            continue
         dtype = str(leaf.dtype)
         assert dtype in ALLOWED, (
             f"{label}: field {field!r} is {dtype}, not in {ALLOWED}"
@@ -87,6 +98,15 @@ def test_wan_trajectory_dtypes(wan_fleet, name, make, record):
     res = simulate_fleet(make(), wan_fleet, T, jax.random.PRNGKey(0),
                          record=record)
     _assert_disciplined(res, f"{name}/record={record}")
+
+
+def test_fleet_telemetry_dtypes(fleet):
+    from repro.telemetry import TelemetryConfig
+
+    res = simulate_fleet(CarbonIntensityPolicy(), fleet, T,
+                         jax.random.PRNGKey(0), record="summary",
+                         telemetry=TelemetryConfig())
+    _assert_disciplined(res, "ci/telemetry-on")
 
 
 def test_fleet_trajectory_dtypes_stable_under_x64(fleet):

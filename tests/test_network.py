@@ -302,6 +302,8 @@ def test_fleet_vmap_shape_dtype_contracts():
     assert res.Qt.shape == (F, T, M, L)
     assert res.energy_transfer.shape == (F, T)
     for field in res:
+        if field is None:  # telemetry is off by default
+            continue
         assert field.dtype == jnp.float32
         assert bool(jnp.isfinite(field).all())
     # cumulative emissions nondecreasing, distinct lanes distinct

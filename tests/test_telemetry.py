@@ -1,0 +1,391 @@
+"""Telemetry layer tests (repro.telemetry).
+
+The standing anchors:
+
+* telemetry=None is bitwise-identical to the pre-telemetry simulators
+  on every variant (plain / WAN / faulted / WAN-faulted) and both score
+  backends -- the tap carry is `()` (zero pytree leaves) so the traced
+  program is the same program;
+* turning the taps ON never perturbs the base trajectory -- every
+  non-telemetry result field stays bitwise equal;
+* the whole Telemetry frame is bitwise equal across the three record
+  modes (series ride the per-slot scalar path, gauges/alerts are
+  reductions of the series);
+* the conservation monitor holds an exact zero residual on all four
+  simulators (it is the check that caught the step_links negative-
+  delivery leak this layer shipped with a fix for);
+* each SLO monitor trips exactly where hand-built probe sequences and
+  deterministic fault scenarios say it must;
+* all three exporters emit output their own validators accept, and
+  `oracle_gap_series` agrees with `oracle_emissions_horizon`.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import fleet_scenarios
+from repro.configs.fleet_scenarios import build_fleet
+from repro.core import (
+    CarbonIntensityPolicy,
+    RandomCarbonSource,
+    TableCarbonSource,
+    UniformArrivals,
+    oracle_emissions_horizon,
+    simulate,
+    simulate_fleet,
+)
+from repro.core.carbon import diurnal_table
+from repro.faults import make_faults
+from repro.network import NetworkAwareDPPPolicy, star_graph
+from repro.telemetry import (
+    MONITORS,
+    TelemetryConfig,
+    TelemetryProbe,
+    finalize_taps,
+    init_taps,
+    lane,
+    manifest,
+    oracle_gap_series,
+    step_taps,
+    to_chrome_trace,
+    to_jsonl,
+    to_prometheus,
+    validate_chrome_trace,
+    validate_dir,
+    validate_jsonl,
+    validate_prometheus,
+    write_run,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+T = 48
+M, N = 4, 3
+CFG = TelemetryConfig()
+KINDS = ["plain", "wan", "faulted", "wan-faulted"]
+K = len(MONITORS)
+
+
+def _setup():
+    spec = fleet_scenarios._base(M, N)
+    return (
+        spec,
+        RandomCarbonSource(N=N),
+        UniformArrivals(M=M),
+        jax.random.PRNGKey(42),
+    )
+
+
+def _run(kind, backend="reference", telemetry=None, record="full"):
+    """One simulation per simulator variant, telemetry on or off."""
+    spec, src, arr, key = _setup()
+    interp = True if backend == "pallas" else None
+    kw = {}
+    if kind in ("wan", "wan-faulted"):
+        pol = NetworkAwareDPPPolicy(
+            V=0.05, score_backend=backend, score_interpret=interp
+        )
+        kw["graph"] = star_graph(M, N, np.random.default_rng(7))
+        if kind == "wan-faulted":
+            kw["faults"] = make_faults(
+                N, kw["graph"].L, task_p_fail=0.1,
+                link_p_down=0.2, link_p_up=0.5, link_floor=0.0,
+            )
+    else:
+        pol = CarbonIntensityPolicy(
+            V=0.05, score_backend=backend, score_interpret=interp
+        )
+        if kind == "faulted":
+            kw["faults"] = make_faults(
+                N, task_p_fail=0.1, cloud_p_down=0.1, cloud_p_up=0.5,
+                telem_p_down=0.1, telem_p_up=0.5,
+            )
+    return simulate(pol, spec, src, arr, T, key,
+                    telemetry=telemetry, record=record, **kw)
+
+
+def _assert_frames_equal(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -------------------------------------------------------- parity anchors
+
+
+def test_telemetry_defaults_to_none():
+    res = _run("plain")
+    assert res.telemetry is None
+    fleet = build_fleet(["diurnal-slack"], per_kind=1, M=M, N=N,
+                        Tc=24, seed=0)
+    fres = simulate_fleet(CarbonIntensityPolicy(), fleet, 12,
+                          jax.random.PRNGKey(0), record="summary")
+    assert fres.telemetry is None
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("kind", KINDS)
+def test_taps_on_leaves_base_fields_bitwise(kind, backend):
+    """The taps observe, never steer: with telemetry=CFG every field
+    the telemetry=None result also carries is bitwise unchanged."""
+    r0 = _run(kind, backend)
+    r1 = _run(kind, backend, telemetry=CFG)
+    assert r0.telemetry is None and r1.telemetry is not None
+    for name in type(r0)._fields:
+        if name == "telemetry":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0, name)),
+            np.asarray(getattr(r1, name)),
+            err_msg=f"{kind}/{backend}: {name}",
+        )
+
+
+@pytest.mark.parametrize("kind", ["faulted", "wan"])
+def test_frame_bitwise_equal_across_record_modes(kind):
+    """TapSeries rides the per-slot scalar path, and every gauge/alert
+    is a reduction of a series -- so the WHOLE frame is record-mode
+    independent, bit for bit."""
+    full = _run(kind, telemetry=CFG, record="full").telemetry
+    summ = _run(kind, telemetry=CFG, record="summary").telemetry
+    strd = _run(kind, telemetry=CFG, record=4).telemetry
+    _assert_frames_equal(full, summ)
+    _assert_frames_equal(full, strd)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_conservation_residual_exactly_zero(kind):
+    """Task conservation (arrived == backlog + processed - failed,
+    in-flight included) holds to an exact 0.0 in float32 on every
+    simulator -- integral counts, exact f32 arithmetic."""
+    tel = _run(kind, telemetry=CFG).telemetry
+    assert float(np.abs(np.asarray(tel.conservation_residual)).max()) \
+        == 0.0
+    k = MONITORS.index("conservation_drift")
+    assert int(np.asarray(tel.alert_tripped)[k]) == 0
+    assert int(np.asarray(tel.alert_first_slot)[k]) == -1
+
+
+# ------------------------------------------------------------ tap math
+
+
+def _probe(backlog=0.0, arrived=0.0, processed=0.0, failed=0.0,
+           stale=0, clouds_down=0.0):
+    return TelemetryProbe(
+        emissions=jnp.float32(1.0),
+        arrived=jnp.float32(arrived),
+        dispatched=jnp.zeros((N,), jnp.float32),
+        processed=jnp.float32(processed),
+        failed=jnp.float32(failed),
+        wasted=jnp.float32(0.0),
+        backlog=jnp.float32(backlog),
+        stale=jnp.int32(stale),
+        clouds_down=jnp.float32(clouds_down),
+        retry_depth=jnp.float32(0.0),
+        transfer_occupancy=jnp.float32(0.0),
+    )
+
+
+def _run_taps(cfg, probes):
+    tap = init_taps()
+    rows = []
+    for p in probes:
+        tap, row = step_taps(cfg, tap, p)
+        rows.append(row)
+    series = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+    return finalize_taps(cfg, series)
+
+
+def _alert(tel, monitor):
+    k = MONITORS.index(monitor)
+    return (
+        int(np.asarray(tel.alert_tripped)[k]),
+        int(np.asarray(tel.alert_first_slot)[k]),
+        int(np.asarray(tel.alert_count)[k]),
+    )
+
+
+def test_backlog_growth_monitor_needs_sustained_growth():
+    cfg = dataclasses.replace(CFG, growth_sustain=3)
+    # backlog 1,2,3,... grows every slot: the run counter reaches 3 at
+    # slot index 2 and never resets.
+    tel = _run_taps(cfg, [_probe(backlog=float(i + 1), arrived=1.0)
+                          for i in range(8)])
+    assert _alert(tel, "backlog_growth") == (1, 2, 6)
+    # a flat slot resets the run: 1,2,2,3,4,5 re-arms at slot 3 and
+    # only reaches 3 consecutive growth slots at slot 5.
+    levels = [1.0, 2.0, 2.0, 3.0, 4.0, 5.0]
+    deltas = [levels[0]] + [b - a for a, b in zip(levels, levels[1:])]
+    tel = _run_taps(cfg, [_probe(backlog=b, arrived=d)
+                          for b, d in zip(levels, deltas)])
+    assert _alert(tel, "backlog_growth") == (1, 5, 1)
+
+
+def test_staleness_monitor_threshold():
+    tel = _run_taps(CFG, [_probe(stale=i) for i in range(10)])
+    # trips strictly beyond the guard budget: stale=5 at slot 5
+    assert _alert(tel, "signal_staleness") == (1, CFG.stale_budget + 1,
+                                               10 - CFG.stale_budget - 1)
+    tel = _run_taps(CFG, [_probe(stale=CFG.stale_budget)] * 6)
+    assert _alert(tel, "signal_staleness") == (0, -1, 0)
+
+
+def test_all_clouds_down_monitor():
+    probes = [_probe(clouds_down=float(N - 1))] * 3 \
+        + [_probe(clouds_down=float(N))] * 2
+    tel = _run_taps(CFG, probes)
+    assert _alert(tel, "all_clouds_down") == (1, 3, 2)
+
+
+def test_conservation_drift_monitor():
+    # one arrival per slot that lands nowhere: residual 1, 2, 3, ...
+    tel = _run_taps(CFG, [_probe(arrived=1.0)] * 4)
+    assert _alert(tel, "conservation_drift") == (1, 0, 4)
+    # balanced books: arrivals either backlogged or processed
+    tel = _run_taps(CFG, [
+        _probe(arrived=2.0, backlog=1.0, processed=1.0),
+        _probe(arrived=2.0, backlog=2.0, processed=1.0),
+    ])
+    assert _alert(tel, "conservation_drift") == (0, -1, 0)
+
+
+# ------------------------------------------ monitors on real fault runs
+
+
+def test_staleness_trips_under_dead_carbon_feed():
+    """telem_p_down=1 kills the feed at slot 0; staleness then grows
+    past any budget and the monitor reports the exact first slot."""
+    spec, src, arr, key = _setup()
+    cfg = dataclasses.replace(CFG, stale_budget=2)
+    res = simulate(
+        CarbonIntensityPolicy(V=0.05), spec, src, arr, T, key,
+        faults=make_faults(N, telem_p_down=1.0, telem_p_up=0.0),
+        telemetry=cfg,
+    )
+    # stale = 1, 2, 3, ... from slot 0; first stale > 2 is slot 2
+    assert _alert(res.telemetry, "signal_staleness") == (1, 2, T - 2)
+    np.testing.assert_array_equal(
+        np.asarray(res.telemetry.staleness), np.arange(1, T + 1)
+    )
+
+
+def test_all_clouds_down_trips_under_total_blackout():
+    spec, src, arr, key = _setup()
+    res = simulate(
+        CarbonIntensityPolicy(V=0.05), spec, src, arr, T, key,
+        faults=make_faults(N, sched_start=0.0, sched_len=float(T)),
+        telemetry=CFG,
+    )
+    assert _alert(res.telemetry, "all_clouds_down") == (1, 0, T)
+    assert float(np.asarray(res.telemetry.clouds_down).min()) == N
+
+
+# --------------------------------------------------------------- fleets
+
+
+def test_fleet_frame_vmaps_and_lane_matches_solo():
+    """simulate_fleet stacks a whole Telemetry frame per lane; one lane
+    of it equals a solo simulate of that lane's scenario."""
+    fleet = build_fleet(["diurnal-slack"], per_kind=2, M=M, N=N,
+                        Tc=24, seed=0)
+    res = simulate_fleet(CarbonIntensityPolicy(), fleet, T,
+                         jax.random.PRNGKey(0), record="summary",
+                         telemetry=CFG)
+    tel = res.telemetry
+    assert np.asarray(tel.peak_backlog).shape == (fleet.F,)
+    assert np.asarray(tel.backlog).shape == (fleet.F, T)
+    assert np.asarray(tel.alert_active).shape == (fleet.F, T, K)
+    assert np.asarray(tel.alert_first_slot).shape == (fleet.F, K)
+    l0 = lane(tel, 0)
+    assert np.asarray(l0.peak_backlog).shape == ()
+    assert np.asarray(l0.backlog).shape == (T,)
+    man = manifest(tel)
+    assert man["peak_backlog"] == float(np.asarray(tel.peak_backlog).max())
+    assert set(man["alerts"]) == set(MONITORS)
+
+
+# ------------------------------------------------------------- exporters
+
+
+@pytest.fixture(scope="module")
+def frame():
+    return _run("faulted", telemetry=CFG).telemetry
+
+
+def test_exporters_roundtrip_their_validators(frame):
+    assert validate_prometheus(to_prometheus(frame)) > 10
+    assert validate_jsonl(to_jsonl(frame)) >= T + 1
+    assert validate_chrome_trace(to_chrome_trace(frame)) > T
+
+
+def test_exporters_reject_fleet_frames(frame):
+    fleet_frame = jax.tree.map(lambda x: jnp.stack([x, x]), frame)
+    with pytest.raises(ValueError, match="lane"):
+        to_prometheus(fleet_frame)
+    # the fleet path is manifest(), which must accept it
+    assert manifest(fleet_frame)["alerts"]
+
+
+def test_write_run_and_validate_dir(frame, tmp_path):
+    paths = write_run(frame, tmp_path, stem="t")
+    counts = validate_dir(tmp_path)
+    assert set(map(str, paths.values())) == set(counts)
+    with pytest.raises(ValueError, match="no .*files"):
+        validate_dir(tmp_path / "empty")
+
+
+def test_validators_reject_garbage():
+    with pytest.raises(ValueError):
+        validate_prometheus("repro_thing 1.0\n")  # sample before TYPE
+    with pytest.raises(ValueError):
+        validate_jsonl('{"event": "slot"}\n')     # no summary
+    with pytest.raises(ValueError):
+        validate_chrome_trace('{"traceEvents": []}')
+
+
+def test_jsonl_slot_events_carry_the_series(frame):
+    import json
+
+    lines = [json.loads(x) for x in to_jsonl(frame).splitlines()]
+    slots = [ev for ev in lines if ev["event"] == "slot"]
+    assert len(slots) == T
+    em = np.asarray(frame.emission_rate)
+    for t in (0, T // 2, T - 1):
+        assert slots[t]["emission_rate"] == pytest.approx(float(em[t]))
+        assert len(slots[t]["dispatched_cloud"]) == N
+
+
+# ------------------------------------------------------------ oracle gap
+
+
+def test_oracle_gap_series_matches_horizon_bound():
+    """oracle_gap_series is the per-slot refinement of
+    oracle_emissions_horizon: same windowed-min repricing, so the sums
+    agree; and at H=1 the oracle is the realized cost (gap ~ 0)."""
+    spec, _, arr, key = _setup()
+    tab = diurnal_table(T, N, np.random.default_rng(3))
+    res = simulate(
+        CarbonIntensityPolicy(V=0.05), spec, TableCarbonSource(tab),
+        arr, T, key, telemetry=CFG,
+    )
+    ee = np.asarray(res.energy_edge, np.float64)
+    ec = np.asarray(res.energy_cloud, np.float64)
+    for horizon in (1, 8, None):
+        oracle, gap = oracle_gap_series(res, tab, horizon=horizon)
+        bound = oracle_emissions_horizon(tab, ee, ec, horizon=horizon)
+        assert float(oracle.sum()) == pytest.approx(bound, rel=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(res.emissions), oracle + gap, rtol=1e-5
+        )
+    oracle1, gap1 = oracle_gap_series(res, tab, horizon=1)
+    assert float(np.abs(gap1).max()) <= 1e-3 * max(
+        1.0, float(np.abs(np.asarray(res.emissions)).max())
+    )
+    # longer windows only cheapen the oracle, slot by slot
+    oracle8, _ = oracle_gap_series(res, tab, horizon=8)
+    assert np.all(oracle8 <= oracle1 + 1e-6)
