@@ -122,6 +122,51 @@ def render(rows) -> str:
                 f"| {r['derived']:+.1f}% "
                 f"| {tripped}/{n_mon} monitors |"
             )
+
+    # live streaming (PR 9): taps-only vs flush-every-16 on the same
+    # single-lane instance; derived on the flush16 row is the overhead
+    # the committed <10% budget was asserted against
+    stream = [
+        r for r in rows if r["name"].startswith("stream/flush16/")
+    ]
+    if stream:
+        lines.append("")
+        lines.append(
+            "| streaming taps | taps-only | flush every 16 | overhead |"
+        )
+        lines.append("|---|---|---|---|")
+        for r in sorted(stream, key=lambda r: r["name"]):
+            size = r["name"].split("/")[-1]
+            off = by_name.get(f"stream/taps_only/{size}")
+            off_s = "-" if off is None else f"{off['us_per_call']:.1f} us"
+            lines.append(
+                f"| {size} | {off_s} | {r['us_per_call']:.1f} us "
+                f"| {r['derived']:+.1f}% |"
+            )
+
+    # serving loop (PR 9): decision-latency percentiles + throughput
+    # from the row's EXTRAS["latency"] columns
+    serve = [r for r in rows if r["name"].startswith("serve/")]
+    if serve:
+        lines.append("")
+        lines.append(
+            "| serving loop | p50 | p95 | p99 | tasks/sec "
+            "| max queue age |"
+        )
+        lines.append("|---|---|---|---|---|---|")
+        for r in sorted(serve, key=lambda r: r["name"]):
+            lat = r.get("latency", {})
+            p95 = lat.get("p95_us")
+            p99 = lat.get("p99_us")
+            age = lat.get("max_queue_age")
+            lines.append(
+                f"| {r['name'].split('/', 1)[1]} "
+                f"| {r['us_per_call']:.0f} us "
+                f"| {'-' if p95 is None else f'{p95:.0f} us'} "
+                f"| {'-' if p99 is None else f'{p99:.0f} us'} "
+                f"| {r['derived']:,.0f} "
+                f"| {'-' if age is None else f'{age} slots'} |"
+            )
     return "\n".join(lines)
 
 

@@ -18,9 +18,19 @@ Benches that also run their workload with the telemetry taps on
 (bench_fault_robustness, bench_telemetry_overhead) deposit a
 ``repro.telemetry.manifest`` dict per row in paper_benches.MANIFESTS;
 it is stamped onto the matching results.json row under ``telemetry``.
-The manifests are informational provenance: ``--compare`` gates
-us_per_call ONLY, so a manifest-only diff (alert counts moving, peak
-backlog shifting) never fails the gate.
+Benches deposit further columns (serve latency percentiles, XLA
+cost_analysis numbers) in paper_benches.EXTRAS, merged the same way.
+Both are informational provenance: ``--compare`` gates us_per_call
+ONLY, so a manifest-only diff (alert counts moving, peak backlog
+shifting) never fails the gate.
+
+Every invocation also appends ONE entry (git sha + dirty flag, env,
+this run's fresh rows) to the append-only perf-trend ledger
+``artifacts/bench/history.jsonl`` -- see benchmarks/trend.py. The
+append happens even when ``--compare`` fails: the ledger records what
+WAS measured; only the results.json baseline is protected from
+regressed numbers. ``--trend`` renders the newest entry's per-row
+deltas against the prior ledger entries after the run.
 """
 from __future__ import annotations
 
@@ -51,6 +61,13 @@ def main() -> None:
                     help="PRNG seed for bench instances; stamped into "
                          "every results.json row so any committed "
                          "number can be re-derived exactly")
+    ap.add_argument("--trend", action="store_true",
+                    help="after the run, render this entry's per-row "
+                         "deltas against the perf-trend ledger "
+                         "(artifacts/bench/history.jsonl)")
+    ap.add_argument("--trend-last", type=int, default=5,
+                    help="how many prior ledger entries --trend diffs "
+                         "against")
     args = ap.parse_args()
     paper_benches.SMOKE = args.smoke
     paper_benches.SEED = args.seed
@@ -60,13 +77,17 @@ def main() -> None:
     ]
 
     # provenance stamped on every row so the perf trajectory in
-    # results.json stays comparable across PRs / machines
+    # results.json stays comparable across PRs / machines; git sha +
+    # dirty flag tie each row to the code that produced it
     import jax
+
+    from benchmarks import trend
 
     env = {
         "jax_version": jax.__version__,
         "platform": jax.default_backend(),
         "seed": args.seed,
+        **trend.git_provenance(),
     }
 
     ART.mkdir(parents=True, exist_ok=True)
@@ -92,6 +113,8 @@ def main() -> None:
                    "bench_wall_s": round(wall_s, 3), **env}
             if bare in paper_benches.MANIFESTS:
                 row["telemetry"] = paper_benches.MANIFESTS[bare]
+            for k, v in paper_benches.EXTRAS.get(bare, {}).items():
+                row.setdefault(k, v)
             all_rows.append(row)
 
     # roofline rows come from dry-run artifacts when present
@@ -112,6 +135,10 @@ def main() -> None:
 
     out = ART / "results.json"
     committed = json.loads(out.read_text()) if out.exists() else []
+
+    # ledger first, unconditionally: history.jsonl records what was
+    # measured, including runs --compare is about to reject
+    trend.append_history(all_rows, env)
 
     # --compare: diff fresh rows against the committed baseline BEFORE
     # merging, so the gate always sees the pre-run numbers.
@@ -140,6 +167,9 @@ def main() -> None:
             if r["name"] not in {x["name"] for x in all_rows}
         ]
         all_rows = kept + all_rows
+    if args.trend:
+        print(trend.render_trend(trend.load_history(),
+                                 last=args.trend_last, only=args.only))
     if regressions:
         # Leave results.json untouched: writing the regressed numbers
         # would install them as the next run's baseline and launder the

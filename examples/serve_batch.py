@@ -4,6 +4,10 @@ are deferred -- up to an SLA bound -- when it is high: the paper's
 "when" flexibility applied to inference).
 
     PYTHONPATH=src python examples/serve_batch.py
+
+For the instrumented serving loop (donated-buffer compiled step,
+decision-latency percentiles, live export) see repro.serve --
+`python -m repro.serve` runs it on a synthetic workload.
 """
 import os
 
@@ -27,6 +31,7 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     carbon = UKRegionalTraceSource(N=1)
+    carbon_key = jax.random.PRNGKey(0)
     rng = np.random.default_rng(0)
 
     queue = []   # (arrival_slot, prompts)
@@ -35,7 +40,12 @@ def main():
     energy_per_batch = 0.02  # kWh proxy for this tiny model
 
     for slot in range(4 if SMOKE else 16):
-        Ce, _ = carbon(jnp.asarray(slot), jax.random.PRNGKey(0))
+        # per-slot subkey, as the simulators thread it: a constant key
+        # freezes every slot's draw for key-consuming sources (e.g.
+        # RandomCarbonSource); the UK trace derives its own, but the
+        # example should model the correct convention
+        Ce, _ = carbon(jnp.asarray(slot),
+                       jax.random.fold_in(carbon_key, slot))
         ci = float(Ce)
         # two new request batches arrive per slot
         for _ in range(2):

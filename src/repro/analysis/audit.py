@@ -18,6 +18,14 @@ the repo's perf and parity claims rest on:
                      ``pure_callback`` / ``debug_callback``) and no
                      JAX effects at all inside the traced program --
                      the fleet scan must stay a pure compiled loop.
+                     The ONE sanctioned exception is the opt-in
+                     streaming-telemetry flush (telemetry.stream):
+                     combos named in ``EFFECTFUL_ALLOWLIST`` may carry
+                     ``io_callback`` and its IO effect, nothing else,
+                     and every other check still applies to them. A
+                     streaming combo absent from the allowlist fails
+                     the audit -- the default path stays provably
+                     callback-free.
   retrace audit      across the full scenario registry, each
                      (policy, backend) presents exactly ONE abstract
                      input signature per shape class, and the policy
@@ -55,6 +63,14 @@ CALLBACK_PRIMITIVES = {
 # contract is float32 state + int32 counters + uint32 PRNG keys + bool
 # flags (core/queueing.py DTYPE).
 ALLOWED_CARRY_DTYPES = {"float32", "int32", "uint32", "bool"}
+
+# Combos allowed to carry the streaming-telemetry io_callback (and the
+# IO effect it hoists onto enclosing scan/pjit eqns) -- the explicit
+# registration DESIGN.md §Live observability requires. Populated next
+# to the streaming combos in iter_combos; anything else tracing an
+# io_callback (including an unregistered StreamConfig combo) still
+# fails the effects check.
+EFFECTFUL_ALLOWLIST: set = set()
 
 AUDIT_T = 8          # slots traced per combo (tracing cost only)
 AUDIT_M, AUDIT_N = 4, 3
@@ -272,6 +288,40 @@ def iter_combos(per_kind: int = AUDIT_PER_KIND) -> List[Combo]:
             make_policy=make, forecaster=None, fleet=fleet,
             record=record, telemetry=tcfg,
         ))
+
+    # Streaming-telemetry combos (repro.telemetry.stream): the ONLY
+    # registry entries whose traced program may carry an io_callback.
+    # Each name is registered in EFFECTFUL_ALLOWLIST; audit_all traces
+    # them with allow_io=True, which tolerates exactly the io_callback
+    # primitive + IO effect while every other check (carry dtypes, weak
+    # types, x64 re-trace, retrace signatures, other callbacks) still
+    # applies. flush_every=4 divides AUDIT_T=8 (streaming requires it).
+    from repro.telemetry import StreamConfig
+
+    scfg = StreamConfig(taps=tcfg, flush_every=4, channel="audit")
+    stream_combos = [
+        ("ci/reference", lambda: CarbonIntensityPolicy(),
+         "diurnal-slack+stream", base, "full"),
+        ("ci/pallas",
+         lambda: CarbonIntensityPolicy(score_backend="pallas"),
+         "diurnal-slack+stream", base, "full"),
+        ("ci/reference", lambda: CarbonIntensityPolicy(),
+         "diurnal-slack+stream/summary", base, "summary"),
+        ("aware/reference", lambda: NetworkAwareDPPPolicy(),
+         "congested-uplink+stream", wan_fleets["congested-uplink"],
+         "full"),
+        ("guard-ci/reference",
+         lambda: StalenessGuardPolicy(CarbonIntensityPolicy()),
+         "telemetry-brownout+stream", brownout, "full"),
+    ]
+    for policy_key, make, scen, fleet, record in stream_combos:
+        name = f"{policy_key}@{scen}"
+        EFFECTFUL_ALLOWLIST.add(name)
+        combos.append(Combo(
+            name=name, policy_key=policy_key, scenario=scen,
+            make_policy=make, forecaster=None, fleet=fleet,
+            record=record, telemetry=scfg,
+        ))
     return combos
 
 
@@ -330,9 +380,21 @@ def _scan_carry_avals(eqn) -> List:
     return []
 
 
+def _is_io_effect(effect) -> bool:
+    return "io" in type(effect).__name__.lower()
+
+
 def audit_jaxpr(closed_jaxpr, combo_name: str,
-                x64_mode: bool = False) -> List[AuditViolation]:
-    """Static checks over one traced program (see module docstring)."""
+                x64_mode: bool = False,
+                allow_io: bool = False) -> List[AuditViolation]:
+    """Static checks over one traced program (see module docstring).
+
+    `allow_io=True` (set by audit_all for EFFECTFUL_ALLOWLIST combos
+    only) tolerates exactly the streaming-telemetry escape hatch: the
+    `io_callback` primitive and the IOEffect it hoists onto enclosing
+    scan/pjit equations. Every other callback/effect, and every other
+    check, is unaffected.
+    """
     out: List[AuditViolation] = []
     seen: set = set()
 
@@ -344,11 +406,17 @@ def audit_jaxpr(closed_jaxpr, combo_name: str,
     for eqn in _iter_eqns(closed_jaxpr.jaxpr):
         name = eqn.primitive.name
         if name in CALLBACK_PRIMITIVES:
-            emit("effects", f"host callback primitive '{name}' in a "
-                 "jitted path")
+            if not (allow_io and name == "io_callback"):
+                emit("effects", f"host callback primitive '{name}' in a "
+                     "jitted path")
         elif eqn.effects:
-            emit("effects",
-                 f"primitive '{name}' carries effects {eqn.effects}")
+            leaked = [
+                e for e in eqn.effects
+                if not (allow_io and _is_io_effect(e))
+            ]
+            if leaked:
+                emit("effects",
+                     f"primitive '{name}' carries effects {leaked}")
         for var in eqn.outvars:
             dtype = getattr(var.aval, "dtype", None)
             if dtype is None:
@@ -405,12 +473,15 @@ def _with_x64(enabled: bool):
     return ctx()
 
 
-def audit_combo(combo: Combo) -> List[AuditViolation]:
+def audit_combo(combo: Combo,
+                allow_io: bool = False) -> List[AuditViolation]:
     """Traces one combo under the default config AND under x64, and
     runs the static checks on both jaxprs. The x64 trace never executes
     anything -- it exists to surface unpinned float defaults
     (``jax.random.uniform`` / ``jnp.zeros`` without ``dtype=``) that
-    default-config float32 canonicalization silently papers over."""
+    default-config float32 canonicalization silently papers over.
+    `allow_io` threads to audit_jaxpr (the streaming-combo escape
+    hatch; audit_all sets it from EFFECTFUL_ALLOWLIST)."""
     fn = _combo_fn(combo)
     key = jax.random.PRNGKey(0)
     out: List[AuditViolation] = []
@@ -419,7 +490,8 @@ def audit_combo(combo: Combo) -> List[AuditViolation]:
     except Exception as e:  # trace failure is itself a finding
         return [AuditViolation(combo.name, "trace",
                                f"default-config trace failed: {e}")]
-    out.extend(audit_jaxpr(closed, combo.name, x64_mode=False))
+    out.extend(audit_jaxpr(closed, combo.name, x64_mode=False,
+                           allow_io=allow_io))
     with _with_x64(True):
         try:
             closed64 = jax.make_jaxpr(fn)(combo.fleet, key)
@@ -430,7 +502,8 @@ def audit_combo(combo: Combo) -> List[AuditViolation]:
                 f"the config instead of being pinned to float32: {e}",
             ))
         else:
-            out.extend(audit_jaxpr(closed64, combo.name, x64_mode=True))
+            out.extend(audit_jaxpr(closed64, combo.name, x64_mode=True,
+                                   allow_io=allow_io))
     return out
 
 
@@ -544,5 +617,7 @@ def audit_all(per_kind: int = AUDIT_PER_KIND,
                 seen.add(k)
                 rep.append(combo)
     for combo in rep:
-        violations.extend(audit_combo(combo))
+        violations.extend(audit_combo(
+            combo, allow_io=combo.name in EFFECTFUL_ALLOWLIST
+        ))
     return violations

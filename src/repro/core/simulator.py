@@ -23,6 +23,7 @@ from repro.core.queueing import (
     init_state,
     step,
 )
+from repro.telemetry.stream import split_telemetry, stream_flush
 from repro.telemetry.taps import (
     TelemetryProbe,
     finalize_taps,
@@ -110,7 +111,8 @@ class SimResult(NamedTuple):
         return self.Qe[-1].sum() + self.Qc[-1].sum()
 
 
-def _record_scan(body, state_of, carry0, T, record):
+def _record_scan(body, state_of, carry0, T, record,
+                 stream=None, lane=None):
     """Shared scan driver for the recording modes.
 
     `body(carry, t) -> (carry, scalars)` runs one slot and emits the
@@ -128,7 +130,20 @@ def _record_scan(body, state_of, carry0, T, record):
     Per-slot scalar ops are identical in every mode (same `body`), so
     the scalar series agree bitwise across modes; only the recorded
     queue trajectories differ in length.
+
+    `stream` (a telemetry.stream.StreamConfig) turns on live flushes:
+    every mode restructures into the stride-style scan of
+    T//flush_every chunks and `stream_flush` hands each chunk's stacked
+    TapSeries (the last element of the body's scalar tuple -- streaming
+    requires taps-on bodies) to the host channel, tagged with `lane`
+    (the fleet lane id; 0 when None). The per-slot values are the same
+    `body` program, so streamed runs stay bitwise equal to batch runs.
     """
+    if stream is not None:
+        return _record_scan_streaming(
+            body, state_of, carry0, T, record, stream,
+            jnp.int32(0) if lane is None else lane,
+        )
     if record == "full":
         def with_state(carry, t):
             carry, scalars = body(carry, t)
@@ -162,6 +177,66 @@ def _record_scan(body, state_of, carry0, T, record):
     return scalars, states
 
 
+def _record_scan_streaming(body, state_of, carry0, T, record, stream,
+                           lane):
+    """The streaming variants of the recording modes: a scan of
+    T//flush_every chunks, each an inner scan of `body` followed by one
+    unconditional `stream_flush` of the chunk's TapSeries slice. The
+    per-slot program is untouched, so scalar outputs stay bitwise equal
+    to the non-streaming modes (the stride mode above already proves
+    scan-of-scans stacking is value-neutral)."""
+    k = stream.flush_every
+    if T % k != 0:
+        raise ValueError(
+            f"streaming needs flush_every={k} to divide T={T}"
+        )
+    if record not in ("full", "summary"):
+        if not isinstance(record, int) or record != k:
+            raise ValueError(
+                f"streaming runs chunk the scan at flush_every={k}; "
+                f"record must be 'full', 'summary', or the stride "
+                f"{k} itself (got record={record!r})"
+            )
+    ts = jnp.arange(T).reshape(T // k, k)
+
+    def flat(x):  # [T//k, k, ...] -> [T, ...]
+        return x.reshape((T,) + x.shape[2:])
+
+    if record == "full":
+        def with_state(carry, t):
+            carry, scalars = body(carry, t)
+            return carry, (scalars, state_of(carry))
+
+        def chunk(carry, tsk):
+            carry, (scalars, states) = jax.lax.scan(
+                with_state, carry, tsk
+            )
+            stream_flush(stream, lane, tsk[0], scalars[-1])
+            return carry, (scalars, states)
+
+        carry, (scalars, states) = jax.lax.scan(chunk, carry0, ts)
+        return (jax.tree.map(flat, scalars),
+                jax.tree.map(flat, states))
+
+    if record == "summary":
+        def chunk(carry, tsk):
+            carry, scalars = jax.lax.scan(body, carry, tsk)
+            stream_flush(stream, lane, tsk[0], scalars[-1])
+            return carry, scalars
+
+        carry, scalars = jax.lax.scan(chunk, carry0, ts)
+        states = jax.tree.map(lambda x: x[None], state_of(carry))
+        return jax.tree.map(flat, scalars), states
+
+    def chunk(carry, tsk):
+        carry, scalars = jax.lax.scan(body, carry, tsk)
+        stream_flush(stream, lane, tsk[0], scalars[-1])
+        return carry, (scalars, state_of(carry))
+
+    carry, (scalars, states) = jax.lax.scan(chunk, carry0, ts)
+    return jax.tree.map(flat, scalars), states
+
+
 def simulate(
     policy: Callable,
     spec: NetworkSpec,
@@ -176,6 +251,7 @@ def simulate(
     record: str | int = "full",
     faults=None,
     telemetry=None,
+    stream_lane=None,
 ) -> SimResult:
     """Runs the network for T slots under `policy`.
 
@@ -227,6 +303,12 @@ def simulate(
     pytree leaves) and the run is bit-identical to a build without the
     telemetry layer -- a standing parity anchor
     (tests/test_telemetry.py, asserted again before bench timing).
+    A `repro.telemetry.StreamConfig` additionally flushes TapSeries
+    slices to a host channel every `flush_every` slots while the scan
+    runs (DESIGN.md §Live observability): same tap values bitwise, but
+    the traced program carries an io_callback, so only audit-allowlisted
+    combos may stream. `stream_lane` tags those flushes with the fleet
+    lane id (set by `simulate_fleet`; defaults to lane 0).
     """
     if graph is not None:
         from repro.network.sim import simulate_network
@@ -235,7 +317,7 @@ def simulate(
             policy, spec, graph, carbon_source, arrival_source, T, key,
             state0=state0, forecaster=forecaster,
             error_params=error_params, record=record, faults=faults,
-            telemetry=telemetry,
+            telemetry=telemetry, stream_lane=stream_lane,
         )
     if faults is not None:
         from repro.faults.sim import simulate_faulted
@@ -244,8 +326,9 @@ def simulate(
             policy, spec, faults, carbon_source, arrival_source, T, key,
             state0=state0, forecaster=forecaster,
             error_params=error_params, record=record,
-            telemetry=telemetry,
+            telemetry=telemetry, stream_lane=stream_lane,
         )
+    telemetry, stream = split_telemetry(telemetry)
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
         state0 = init_state(spec.M, spec.N)
@@ -304,7 +387,8 @@ def simulate(
         init_taps() if telemetry is not None else (),
     )
     scalars, (Qe, Qc) = _record_scan(
-        body, lambda carry: (carry[0].Qe, carry[0].Qc), carry0, T, record
+        body, lambda carry: (carry[0].Qe, carry[0].Qc), carry0, T,
+        record, stream=stream, lane=stream_lane,
     )
     if telemetry is None:
         (C, disp, proc, ee, ec), tel = scalars, None
@@ -470,13 +554,20 @@ def simulate_fleet(
     `telemetry` threads to every lane: the result's `.telemetry` frame
     carries a leading [F] axis on every field (select one lane with
     `repro.telemetry.lane`, or reduce the fleet with
-    `repro.telemetry.manifest`).
+    `repro.telemetry.manifest`). A StreamConfig streams every lane to
+    the same channel with `lane=f` payload tags (the vmapped
+    io_callback fires once per lane per chunk with unbatched slices,
+    so the tag is the only lane identity a consumer gets); the lane
+    axis only joins the vmap when streaming is on, keeping the
+    batch-telemetry program untouched.
     """
     F = fleet.F
     M = fleet.arrival_amax.shape[1]
     keys = jax.random.split(key, F)
+    streaming = split_telemetry(telemetry)[1] is not None
+    lanes = jnp.arange(F, dtype=jnp.int32) if streaming else None
 
-    def one(pe, pc, Pe, Pc, ctab, amax, k, graph, err, faults):
+    def one(pe, pc, Pe, Pc, ctab, amax, k, graph, err, faults, lane):
         spec = NetworkSpec(pe=pe, pc=pc, Pe=Pe, Pc=Pc)
         # TableCarbonSource traces fine with a batched ctab; its .table
         # attribute is also how simulate() hands each lane's slab to
@@ -492,6 +583,7 @@ def simulate_fleet(
             policy, spec, carbon_source, arrival_source, T, k,
             forecaster=forecaster, graph=graph, error_params=err,
             record=record, faults=faults, telemetry=telemetry,
+            stream_lane=lane,
         )
 
     err = (
@@ -503,11 +595,12 @@ def simulate_fleet(
         in_axes=(0, 0, 0, 0, 0, 0, 0,
                  0 if fleet.graph is not None else None,
                  0 if err is not None else None,
-                 0 if fleet.faults is not None else None),
+                 0 if fleet.faults is not None else None,
+                 0 if streaming else None),
     )(
         fleet.spec.pe, fleet.spec.pc, fleet.spec.Pe, fleet.spec.Pc,
         fleet.carbon, fleet.arrival_amax, keys, fleet.graph, err,
-        fleet.faults,
+        fleet.faults, lanes,
     )
 
 

@@ -51,6 +51,7 @@ from repro.faults.model import (
     requeue_failed,
     step_faults,
 )
+from repro.telemetry.stream import split_telemetry
 from repro.telemetry.taps import (
     TelemetryProbe,
     finalize_taps,
@@ -138,11 +139,13 @@ def simulate_faulted(
     error_params=None,
     record: str | int = "full",
     telemetry=None,
+    stream_lane=None,
 ) -> FaultSimResult:
     """The link-free faulted run; see the module docstring for slot
     order. The fault PRNG stream is `fold_in(key, FAULT_STREAM_SALT)`,
     leaving the carbon/arrival/policy streams bit-identical to the
     fault-free simulator's."""
+    telemetry, stream = split_telemetry(telemetry)
     pe, pc, Pe, Pc = spec.as_arrays()
     if state0 is None:
         state0 = init_state(spec.M, spec.N)
@@ -234,7 +237,7 @@ def simulate_faulted(
     scalars, states = _record_scan(
         body,
         lambda carry: (carry[0].Qe, carry[0].Qc, carry[1].retry),
-        carry0, T, record,
+        carry0, T, record, stream=stream, lane=stream_lane,
     )
     if telemetry is None:
         tel = None
@@ -269,9 +272,11 @@ def simulate_network_faulted(
     error_params=None,
     record: str | int = "full",
     telemetry=None,
+    stream_lane=None,
 ) -> NetFaultSimResult:
     """The WAN faulted run: link flaps scale each route's bandwidth in
     `step_links`; everything else mirrors `simulate_faulted`."""
+    telemetry, stream = split_telemetry(telemetry)
     from repro.network.transfer import (
         NetAction,
         init_links,
@@ -388,7 +393,7 @@ def simulate_network_faulted(
         lambda carry: (
             carry[0].Qe, carry[0].Qc, carry[1].Qt, carry[2].retry
         ),
-        carry0, T, record,
+        carry0, T, record, stream=stream, lane=stream_lane,
     )
     if telemetry is None:
         tel = None

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.queueing import NetworkState, NetworkSpec, init_state
 from repro.core.simulator import _record_scan, init_forecaster_carry
+from repro.telemetry.stream import split_telemetry
 from repro.network.graph import LinkGraph
 from repro.network.transfer import (
     NetAction,
@@ -85,6 +86,7 @@ def simulate_network(
     record: str | int = "full",
     faults=None,
     telemetry=None,
+    stream_lane=None,
 ) -> NetSimResult:
     """Runs the network + WAN for T slots under a route-aware policy.
 
@@ -115,8 +117,9 @@ def simulate_network(
             policy, spec, graph, faults, carbon_source, arrival_source,
             T, key, state0=state0, forecaster=forecaster,
             error_params=error_params, record=record,
-            telemetry=telemetry,
+            telemetry=telemetry, stream_lane=stream_lane,
         )
+    telemetry, stream = split_telemetry(telemetry)
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
         state0 = init_state(spec.M, spec.N)
@@ -188,7 +191,7 @@ def simulate_network(
     )
     scalars, (Qe, Qc, Qt) = _record_scan(
         body, lambda carry: (carry[0].Qe, carry[0].Qc, carry[1].Qt),
-        carry0, T, record,
+        carry0, T, record, stream=stream, lane=stream_lane,
     )
     if telemetry is None:
         (C, disp, deliv, proc, ee, et, ec), tel = scalars, None

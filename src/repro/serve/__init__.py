@@ -1,0 +1,17 @@
+"""Online serving: the batch simulators' per-slot decision run as a
+host loop around ONE donated-buffer compiled step, instrumented with
+decision-latency percentiles, throughput and queue-age gauges
+(DESIGN.md §Live observability)."""
+from repro.serve.loop import (
+    ServeReport,
+    latency_percentiles,
+    make_serve_step,
+    serve_loop,
+)
+
+__all__ = [
+    "ServeReport",
+    "latency_percentiles",
+    "make_serve_step",
+    "serve_loop",
+]

@@ -1,0 +1,5 @@
+"""`python -m repro.serve` -- the serving-smoke CLI (see loop.main)."""
+from repro.serve.loop import main
+
+if __name__ == "__main__":
+    main()

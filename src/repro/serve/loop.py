@@ -1,0 +1,405 @@
+"""Serving loop: streaming arrivals through one compiled step.
+
+The batch simulators run T slots inside one `lax.scan`; a serving
+deployment sees slots arrive in real time and must DECIDE each one as
+it lands. This module promotes `examples/serve_batch.py`'s ad-hoc loop
+into the library: `make_serve_step` compiles exactly one donated-buffer
+step function (the SAME per-slot program as `core.simulator.simulate`'s
+scan body, same PRNG stream splits -- so a served trajectory is bitwise
+the batch trajectory), and `serve_loop` drives it from the host,
+timing every decision.
+
+Observability contract (ISSUE 9 / DESIGN.md §Live observability):
+
+* decision latency -- wall time of one step call, device-synced via
+  `block_until_ready`, recorded per slot; percentiles (p50/p95/p99,
+  `np.percentile` linear interpolation) exclude the first `warmup`
+  slots, where the call pays XLA compilation;
+* throughput -- tasks/sec over the run's wall clock;
+* queue age -- a host-side FIFO of (arrival slot, count) drained
+  oldest-first by each slot's processing attempts: the age of the
+  oldest unserved task, per slot, plus its max over the run;
+* live export -- every `flush_every` slots the JSONL event log grows
+  one `slot` event per slot and the Prometheus snapshot (counters,
+  gauges, a latency histogram) is rewritten, so the run is watchable
+  while it executes. `close` appends the terminal `summary` event --
+  computed from the SAME per-slot arrays as the live events, so the
+  live series always reconciles with the end-of-run `ServeReport`.
+
+The clock is injectable (`clock=` callable returning seconds) and the
+loop calls it in a fixed pattern -- once before the loop, twice per
+slot (around the step), once after -- so tests drive it with a fake
+and get deterministic histograms.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.queueing import (
+    Action,
+    NetworkSpec,
+    emissions,
+    init_state,
+)
+from repro.core.queueing import step as queue_step
+
+# Latency histogram buckets (microseconds), Prometheus-style with a
+# terminal +Inf bucket appended by the exporter.
+LATENCY_BUCKETS_US = (
+    50.0, 100.0, 200.0, 500.0, 1e3, 2e3, 5e3, 1e4, 2e4, 5e4, 1e5, 1e6,
+)
+
+
+class ServeReport(NamedTuple):
+    """End-of-run summary of a `serve_loop` drive. Scalar fields are
+    what the terminal JSONL `summary` event carries; the arrays are the
+    full per-slot series behind them."""
+
+    slots: int
+    warmup: int            # leading slots excluded from percentiles
+    tasks_arrived: float
+    tasks_dispatched: float
+    tasks_processed: float
+    total_emissions: float
+    wall_s: float
+    tasks_per_sec: float   # arrived tasks / wall_s
+    p50_us: float          # decision-latency percentiles over
+    p95_us: float          #   slots[warmup:]
+    p99_us: float
+    mean_us: float
+    max_queue_age: int     # slots; oldest unserved task over the run
+    latency_us: np.ndarray  # [slots] every decision, warmup included
+    backlog: np.ndarray     # [slots] post-step Qe+Qc total
+    queue_age: np.ndarray   # [slots] oldest unserved task's age
+
+
+def latency_percentiles(lat_us) -> tuple:
+    """(p50, p95, p99, mean) of a latency sample, `np.percentile`
+    linear interpolation -- the one definition every consumer
+    (ServeReport, live export, bench rows, perf_table) shares."""
+    lat = np.asarray(lat_us, np.float64)
+    p50, p95, p99 = (float(x) for x in
+                     np.percentile(lat, [50.0, 95.0, 99.0]))
+    return p50, p95, p99, float(lat.mean())
+
+
+def make_serve_step(policy, spec: NetworkSpec, carbon_source,
+                    arrival_source, key) -> Callable:
+    """Compiles the one serving step: `(state, t) -> (state', metrics)`
+    with the state buffers DONATED (the loop never reuses the old
+    state, so XLA may update queues in place).
+
+    The body is `core.simulator.simulate`'s fault-free scan body with
+    the same `jax.random.split(key, 3)` stream assignment, so driving
+    it over t = 0..T-1 reproduces the batch trajectory bitwise.
+    metrics = (emissions, arrived, dispatched, processed, backlog),
+    all f32 scalars.
+    """
+    k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
+
+    def step(state, t):
+        Ce, Cc = carbon_source(t, k_carbon)
+        a = arrival_source(t, k_arrive)
+        k_t = jax.random.fold_in(k_policy, t)
+        act: Action = policy(state, spec, Ce, Cc, a, k_t)
+        C_t = emissions(spec, act, Ce, Cc)
+        nxt = queue_step(state, act, a)
+        metrics = (
+            C_t,
+            jnp.sum(a),
+            jnp.sum(act.d),
+            jnp.sum(act.w),
+            jnp.sum(nxt.Qe) + jnp.sum(nxt.Qc),
+        )
+        return nxt, metrics
+
+    return jax.jit(step, donate_argnums=0)
+
+
+class _AgeFifo:
+    """Host-side queue-age bookkeeping: arrivals enqueue (slot, count),
+    processing attempts drain oldest-first; `age(t)` is the age of the
+    oldest task still waiting. An approximation of per-task sojourn
+    (the device queues are per-type/cloud, the FIFO is global) but an
+    exact upper-bound gauge for "how stale is the oldest work"."""
+
+    def __init__(self):
+        self._fifo: list = []
+
+    def update(self, t: int, arrived: float, processed: float) -> int:
+        if arrived > 0:
+            self._fifo.append([t, arrived])
+        drain = processed
+        while drain > 0 and self._fifo:
+            head = self._fifo[0]
+            take = min(head[1], drain)
+            head[1] -= take
+            drain -= take
+            if head[1] <= 0:
+                self._fifo.pop(0)
+        return t - self._fifo[0][0] if self._fifo else 0
+
+
+class ServeExporter:
+    """Live Prometheus/JSONL writer for a serving run (the serve-side
+    sibling of telemetry.export.FollowedRun). Buffers slot events and
+    flushes every `flush_every` slots: appends the events to
+    `<stem>.jsonl` and rewrites `<stem>.prom`. `close(report)` appends
+    the terminal `summary` event built from the ServeReport, so
+    `validate_jsonl` passes and live series reconcile with the summary
+    by construction."""
+
+    def __init__(self, outdir, stem: str = "serve",
+                 flush_every: int = 16, warmup: int = 2):
+        outdir = Path(outdir)
+        outdir.mkdir(parents=True, exist_ok=True)
+        self.paths = {
+            "jsonl": outdir / f"{stem}.jsonl",
+            "prometheus": outdir / f"{stem}.prom",
+        }
+        self.paths["jsonl"].write_text("")
+        self.flush_every = flush_every
+        self.warmup = warmup
+        self._pending: list = []
+        self._slots = 0
+        self._lat: list = []       # non-warmup latencies so far
+        self._totals = {"arrived": 0.0, "dispatched": 0.0,
+                        "processed": 0.0, "emissions": 0.0}
+        self._last = {"backlog": 0.0, "queue_age": 0}
+
+    def record(self, t: int, latency_us: float, arrived: float,
+               dispatched: float, processed: float, backlog: float,
+               queue_age: int, emissions_t: float) -> None:
+        self._pending.append(json.dumps({
+            "event": "slot", "kind": "serve", "t": t,
+            "latency_us": latency_us, "arrived": arrived,
+            "dispatched": dispatched, "processed": processed,
+            "backlog": backlog, "queue_age": queue_age,
+            "emissions": emissions_t, "warmup": t < self.warmup,
+        }))
+        self._slots += 1
+        if t >= self.warmup:
+            self._lat.append(latency_us)
+        self._totals["arrived"] += arrived
+        self._totals["dispatched"] += dispatched
+        self._totals["processed"] += processed
+        self._totals["emissions"] += emissions_t
+        self._last = {"backlog": backlog, "queue_age": queue_age}
+        if len(self._pending) >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> None:
+        if self._pending:
+            with self.paths["jsonl"].open("a") as fh:
+                fh.write("\n".join(self._pending) + "\n")
+            self._pending = []
+        self.paths["prometheus"].write_text(self._prometheus())
+
+    def _prometheus(self) -> str:
+        lines = []
+
+        def emit(name, kind, help_, samples):
+            lines.append(f"# HELP {name} {help_}")
+            lines.append(f"# TYPE {name} {kind}")
+            for labels, value in samples:
+                lines.append(f"{name}{labels} {value:.10g}")
+
+        emit("repro_serve_slots", "counter", "slots decided so far",
+             [("", self._slots)])
+        for k, v in self._totals.items():
+            unit = "gCO2" if k == "emissions" else "tasks"
+            emit(f"repro_serve_{k}_total", "counter",
+                 f"running {k} over served slots ({unit})", [("", v)])
+        emit("repro_serve_backlog", "gauge",
+             "post-step backlog at the newest slot (tasks)",
+             [("", self._last["backlog"])])
+        emit("repro_serve_queue_age", "gauge",
+             "oldest unserved task's age at the newest slot (slots)",
+             [("", self._last["queue_age"])])
+        if self._lat:
+            lat = np.asarray(self._lat)
+            p50, p95, p99, mean = latency_percentiles(lat)
+            for q, v in (("p50", p50), ("p95", p95), ("p99", p99),
+                         ("mean", mean)):
+                emit(f"repro_serve_latency_{q}_us", "gauge",
+                     f"decision latency {q} over non-warmup slots (us)",
+                     [("", v)])
+            name = "repro_serve_latency_us"
+            lines.append(f"# HELP {name} decision latency (us)")
+            lines.append(f"# TYPE {name} histogram")
+            cum = 0
+            for b in LATENCY_BUCKETS_US:
+                cum = int((lat <= b).sum())
+                lines.append(f'{name}_bucket{{le="{b:g}"}} {cum}')
+            lines.append(f'{name}_bucket{{le="+Inf"}} {lat.size}')
+            lines.append(f"{name}_sum {lat.sum():.10g}")
+            lines.append(f"{name}_count {lat.size}")
+        return "\n".join(lines) + "\n"
+
+    def close(self, report: ServeReport) -> dict:
+        self.flush()
+        summary = {
+            "event": "summary", "kind": "serve",
+            "slots": report.slots, "warmup": report.warmup,
+            "tasks_arrived": report.tasks_arrived,
+            "tasks_dispatched": report.tasks_dispatched,
+            "tasks_processed": report.tasks_processed,
+            "total_emissions": report.total_emissions,
+            "wall_s": report.wall_s,
+            "tasks_per_sec": report.tasks_per_sec,
+            "p50_us": report.p50_us, "p95_us": report.p95_us,
+            "p99_us": report.p99_us, "mean_us": report.mean_us,
+            "max_queue_age": report.max_queue_age,
+        }
+        with self.paths["jsonl"].open("a") as fh:
+            fh.write(json.dumps(summary) + "\n")
+        self.paths["prometheus"].write_text(self._prometheus())
+        return self.paths
+
+
+def serve_loop(policy, spec: NetworkSpec, carbon_source, arrival_source,
+               T: int, key, *, warmup: int = 2, clock=None,
+               outdir=None, stem: str = "serve",
+               flush_every: int = 16) -> ServeReport:
+    """Drives `make_serve_step` for T slots from the host, timing every
+    decision. `clock` defaults to `time.perf_counter`; inject a fake
+    (called 2T + 2 times: loop start, before/after each step, loop end)
+    for deterministic latency tests. `outdir` turns on live export via
+    ServeExporter. Percentiles cover slots[warmup:] (slot 0 pays XLA
+    compilation); `warmup` is clamped to T-1 so tiny runs still report.
+    """
+    if clock is None:
+        clock = time.perf_counter
+    warmup = max(0, min(warmup, T - 1))
+    exporter = None
+    if outdir is not None:
+        exporter = ServeExporter(outdir, stem=stem,
+                                 flush_every=flush_every, warmup=warmup)
+    step = make_serve_step(policy, spec, carbon_source, arrival_source,
+                           key)
+    state = init_state(spec.M, spec.N)
+    ages = _AgeFifo()
+    lat = np.zeros(T)
+    backlog = np.zeros(T)
+    queue_age = np.zeros(T, np.int64)
+    totals = {"arrived": 0.0, "dispatched": 0.0, "processed": 0.0,
+              "emissions": 0.0}
+
+    t_start = clock()
+    for t in range(T):
+        c0 = clock()
+        state, metrics = step(state, jnp.int32(t))
+        jax.block_until_ready(metrics)
+        c1 = clock()
+        lat[t] = (c1 - c0) * 1e6
+        em_t, arrived, dispatched, processed, bl = (
+            float(x) for x in metrics
+        )
+        totals["arrived"] += arrived
+        totals["dispatched"] += dispatched
+        totals["processed"] += processed
+        totals["emissions"] += em_t
+        backlog[t] = bl
+        queue_age[t] = ages.update(t, arrived, processed)
+        if exporter is not None:
+            exporter.record(t, lat[t], arrived, dispatched, processed,
+                            bl, int(queue_age[t]), em_t)
+    wall_s = clock() - t_start
+
+    p50, p95, p99, mean = latency_percentiles(lat[warmup:])
+    report = ServeReport(
+        slots=T,
+        warmup=warmup,
+        tasks_arrived=totals["arrived"],
+        tasks_dispatched=totals["dispatched"],
+        tasks_processed=totals["processed"],
+        total_emissions=totals["emissions"],
+        wall_s=wall_s,
+        tasks_per_sec=totals["arrived"] / max(wall_s, 1e-12),
+        p50_us=p50, p95_us=p95, p99_us=p99, mean_us=mean,
+        max_queue_age=int(queue_age.max()),
+        latency_us=lat,
+        backlog=backlog,
+        queue_age=queue_age,
+    )
+    if exporter is not None:
+        exporter.close(report)
+    return report
+
+
+def _demo_spec(M: int, N: int, seed: int) -> NetworkSpec:
+    rng = np.random.default_rng(seed)
+    return NetworkSpec(
+        pe=rng.uniform(1, 8, M).astype(np.float32),
+        pc=rng.uniform(2, 100, (M, N)).astype(np.float32),
+        Pe=1e4,
+        Pc=rng.uniform(1e3, 1e5, N).astype(np.float32),
+    )
+
+
+def main(argv=None) -> ServeReport:
+    """CLI: `python -m repro.serve.loop` -- the CI serving-smoke entry.
+    Serves a synthetic workload, prints the latency/throughput summary
+    and (with `--outdir`) leaves live-exported Prometheus + JSONL
+    behind for parse validation. REPRO_SMOKE=1 shrinks the instance;
+    even smoke pushes >= 10^4 synthetic tasks through admission."""
+    from repro.core import (
+        CarbonIntensityPolicy,
+        UKRegionalTraceSource,
+        UniformArrivals,
+    )
+
+    smoke = os.environ.get("REPRO_SMOKE") == "1"
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=24 if smoke else 64)
+    ap.add_argument("--types", type=int, default=16 if smoke else 64,
+                    help="task types M")
+    ap.add_argument("--clouds", type=int, default=4 if smoke else 8)
+    ap.add_argument("--amax", type=int, default=100 if smoke else 300)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--flush-every", type=int, default=8)
+    ap.add_argument("--outdir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    spec = _demo_spec(args.types, args.clouds, args.seed)
+    report = serve_loop(
+        CarbonIntensityPolicy(V=0.05),
+        spec,
+        UKRegionalTraceSource(N=args.clouds),
+        UniformArrivals(M=args.types, amax=args.amax),
+        args.slots,
+        jax.random.PRNGKey(args.seed),
+        warmup=args.warmup,
+        outdir=args.outdir,
+        flush_every=args.flush_every,
+    )
+    print(f"served {report.slots} slots "
+          f"(M={args.types}, N={args.clouds}, amax={args.amax})")
+    print(f"tasks arrived {report.tasks_arrived:.0f}, "
+          f"processed {report.tasks_processed:.0f}, "
+          f"throughput {report.tasks_per_sec:,.0f} tasks/sec")
+    print(f"decision latency p50 {report.p50_us:.0f} us, "
+          f"p95 {report.p95_us:.0f} us, p99 {report.p99_us:.0f} us "
+          f"(warmup={report.warmup} excluded)")
+    print(f"max queue age {report.max_queue_age} slots, "
+          f"emissions {report.total_emissions:.3g} gCO2-eq")
+    if report.tasks_arrived < 1e4:
+        raise SystemExit(
+            f"serving smoke must cover >= 10^4 tasks, got "
+            f"{report.tasks_arrived:.0f}"
+        )
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -7,8 +7,17 @@ Turn it on by passing `telemetry=TelemetryConfig()` to any simulator
 `.telemetry` field then carries a `Telemetry` frame of per-slot series,
 run gauges, and structured alert records. `telemetry=None` (the
 default) is bit-identical to a build without this package.
+
+Live mode: pass `telemetry=StreamConfig(flush_every=k)` instead and
+attach a `follow_run` consumer -- TapSeries slices flush to a host
+StreamChannel every k slots WHILE the scan runs, feeding the same
+Prometheus/JSONL formats incrementally (DESIGN.md §Live observability;
+the traced program then carries an io_callback and must be on the
+jaxpr audit's effectful allowlist).
 """
 from repro.telemetry.export import (
+    FollowedRun,
+    follow_run,
     manifest,
     oracle_gap_series,
     to_chrome_trace,
@@ -22,6 +31,13 @@ from repro.telemetry.export import (
 )
 from repro.telemetry.monitors import MONITORS, monitor_conditions
 from repro.telemetry.profile import PHASES, phase, trace_to
+from repro.telemetry.stream import (
+    StreamChannel,
+    StreamConfig,
+    channel,
+    reset_channel,
+    split_telemetry,
+)
 from repro.telemetry.taps import (
     METRICS,
     MetricSpec,
@@ -40,16 +56,23 @@ __all__ = [
     "MONITORS",
     "METRICS",
     "PHASES",
+    "FollowedRun",
     "MetricSpec",
+    "StreamChannel",
+    "StreamConfig",
     "TapSeries",
     "TapState",
     "Telemetry",
     "TelemetryConfig",
     "TelemetryProbe",
+    "channel",
     "finalize_taps",
+    "follow_run",
     "init_taps",
     "lane",
     "manifest",
+    "reset_channel",
+    "split_telemetry",
     "monitor_conditions",
     "oracle_gap_series",
     "phase",

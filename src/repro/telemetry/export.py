@@ -1,9 +1,13 @@
 """Host-side exporters for recorded Telemetry frames.
 
-Everything here runs AFTER the compiled call returns (plain
-numpy/json on concrete arrays) -- by design there is no io_callback in
-the traced program, so the audit's effect-freedom gate stays meaningful
-and the exporters can never perturb a run (DESIGN.md §Observability).
+Everything here runs host-side on concrete numpy values. The batch
+exporters run AFTER the compiled call returns -- by design there is no
+io_callback in the default traced program, so the audit's
+effect-freedom gate stays meaningful and the exporters can never
+perturb a run (DESIGN.md §Observability). `follow_run` is the live
+consumer for the opt-in streaming path (telemetry.stream): it
+subscribes to a StreamChannel and re-renders the same wire formats
+incrementally while the scan is still executing.
 
 Three wire formats, each with a parse-checking validator the tests and
 the CI telemetry-smoke job run against real output:
@@ -228,6 +232,185 @@ def oracle_gap_series(result, carbon_table, horizon=None):
     return oracle.astype(np.float32), (em - oracle).astype(np.float32)
 
 
+class FollowedRun:
+    """Live consumer for a streaming run (see telemetry.stream).
+
+    Subscribes to the named StreamChannel: every flushed TapSeries
+    slice appends one JSONL `slot` event per slot (the same fields
+    `to_jsonl` writes, plus the fleet `lane`) and rewrites a running
+    Prometheus snapshot. `close()` detaches, appends the terminal
+    `summary` event and returns the paths, so the live file passes the
+    same `validate_jsonl` gate as batch output. With `outdir=None`
+    nothing is written -- the object still accumulates totals and
+    serves `series(lane)` (the bitwise reassembly of the batch
+    TapSeries, delegated to the channel buffer).
+
+    Flush callbacks fire from XLA runtime threads and lanes interleave:
+    all mutation happens under one lock, and events are keyed by their
+    payload (lane, t) rather than arrival order.
+    """
+
+    def __init__(self, channel_name: str = "default", outdir=None,
+                 stem: str = "live"):
+        import threading
+
+        from repro.telemetry.stream import channel
+
+        self._channel = channel(channel_name)
+        self._lock = threading.Lock()
+        self._lanes: set = set()
+        self._slots = 0
+        self._flushes = 0
+        self._totals = {
+            "total_emissions": 0.0, "total_arrived": 0.0,
+            "total_processed": 0.0, "total_failed": 0.0,
+            "total_wasted": 0.0,
+        }
+        self._last_backlog: dict = {}
+        self.paths: dict = {}
+        if outdir is not None:
+            outdir = Path(outdir)
+            outdir.mkdir(parents=True, exist_ok=True)
+            self.paths = {
+                "jsonl": outdir / f"{stem}.jsonl",
+                "prometheus": outdir / f"{stem}.prom",
+            }
+            self.paths["jsonl"].write_text("")
+        self._closed = False
+        self._channel.subscribe(self._on_flush)
+
+    # -- consumer side -------------------------------------------------
+
+    def _on_flush(self, lane: int, t0: int, slice_) -> None:
+        T = np.asarray(slice_.arrived).shape[0]
+        active = np.asarray(slice_.alert_active)
+        events = []
+        for i in range(T):
+            ev = {"event": "slot", "lane": int(lane), "t": int(t0 + i)}
+            for f in _SCALAR_SERIES:
+                ev[f] = float(np.asarray(getattr(slice_, f))[i])
+            ev["dispatched_cloud"] = [
+                float(x) for x in np.asarray(slice_.dispatched_cloud)[i]
+            ]
+            ev["alerts_active"] = [
+                mon for k, mon in enumerate(MONITORS) if active[i, k]
+            ]
+            events.append(json.dumps(ev))
+        with self._lock:
+            self._flushes += 1
+            self._slots += T
+            self._lanes.add(int(lane))
+            self._totals["total_emissions"] += float(
+                np.asarray(slice_.emission_rate).sum()
+            )
+            self._totals["total_arrived"] += float(
+                np.asarray(slice_.arrived).sum()
+            )
+            self._totals["total_processed"] += float(
+                np.asarray(slice_.processed).sum()
+            )
+            self._totals["total_failed"] += float(
+                np.asarray(slice_.failed).sum()
+            )
+            self._totals["total_wasted"] += float(
+                np.asarray(slice_.wasted).sum()
+            )
+            self._last_backlog[int(lane)] = float(
+                np.asarray(slice_.backlog)[-1]
+            )
+            if self.paths:
+                with self.paths["jsonl"].open("a") as fh:
+                    fh.write("\n".join(events) + "\n")
+                self.paths["prometheus"].write_text(
+                    self._prometheus_locked()
+                )
+
+    def _prometheus_locked(self) -> str:
+        lines = []
+
+        def emit(name, kind, help_, samples):
+            lines.append(f"# HELP {name} {help_}")
+            lines.append(f"# TYPE {name} {kind}")
+            for labels, value in samples:
+                lines.append(f"{name}{labels} {value:.10g}")
+
+        emit("repro_stream_flushes", "counter",
+             "TapSeries slices flushed so far", [("", self._flushes)])
+        emit("repro_stream_slots", "counter",
+             "lane-slots streamed so far", [("", self._slots)])
+        emit("repro_stream_lanes", "gauge",
+             "fleet lanes seen so far", [("", len(self._lanes))])
+        for key, val in self._totals.items():
+            emit(f"repro_stream_{key.replace('total_', '')}_total",
+                 "counter", f"running {key} over streamed slots",
+                 [("", val)])
+        emit("repro_stream_backlog_last", "gauge",
+             "backlog at each lane's newest streamed slot",
+             [(f'{{lane="{ln}"}}', v)
+              for ln, v in sorted(self._last_backlog.items())])
+        return "\n".join(lines) + "\n"
+
+    # -- reader side ---------------------------------------------------
+
+    def to_prometheus(self) -> str:
+        with self._lock:
+            return self._prometheus_locked()
+
+    @property
+    def slots(self) -> int:
+        with self._lock:
+            return self._slots
+
+    def lanes(self):
+        with self._lock:
+            return sorted(self._lanes)
+
+    def totals(self) -> dict:
+        with self._lock:
+            return dict(self._totals)
+
+    def series(self, lane: int = 0):
+        """The reassembled [T, ...] TapSeries for one lane (bitwise
+        equal to the batch frame's series; see StreamChannel.series)."""
+        return self._channel.series(lane)
+
+    def close(self) -> dict:
+        """Detaches from the channel, writes the terminal `summary`
+        event + final Prometheus snapshot, and returns the paths."""
+        if self._closed:
+            return self.paths
+        self._channel.unsubscribe(self._on_flush)
+        self._closed = True
+        with self._lock:
+            if self.paths:
+                summary = {
+                    "event": "summary", "lanes": len(self._lanes),
+                    "slots": self._slots, "flushes": self._flushes,
+                    **self._totals,
+                }
+                with self.paths["jsonl"].open("a") as fh:
+                    fh.write(json.dumps(summary) + "\n")
+                self.paths["prometheus"].write_text(
+                    self._prometheus_locked()
+                )
+        return self.paths
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def follow_run(channel: str = "default", outdir=None,
+               stem: str = "live") -> FollowedRun:
+    """Attaches a live consumer to a streaming channel: returns a
+    FollowedRun already subscribed (use as a context manager around the
+    compiled call; see README §Watching a run, live mode)."""
+    return FollowedRun(channel, outdir=outdir, stem=stem)
+
+
 def write_run(frame: Telemetry, outdir, stem: str = "run") -> dict:
     """Writes all three wire formats for one lane; returns the paths."""
     outdir = Path(outdir)
@@ -250,9 +433,13 @@ _PROM_SAMPLE = re.compile(
 
 
 def validate_prometheus(text: str) -> int:
-    """Parse-checks Prometheus text exposition; returns sample count."""
+    """Parse-checks Prometheus text exposition; returns sample count.
+    Histogram samples use the conventional `<base>_bucket` /
+    `<base>_sum` / `<base>_count` suffixes under one `TYPE <base>
+    histogram` declaration."""
     samples = 0
     typed = set()
+    histograms = set()
     for i, line in enumerate(text.splitlines()):
         if not line.strip():
             continue
@@ -262,11 +449,14 @@ def validate_prometheus(text: str) -> int:
                 raise ValueError(f"bad comment line {i + 1}: {line!r}")
             if parts[1] == "TYPE":
                 typed.add(parts[2])
+                if parts[3] == "histogram":
+                    histograms.add(parts[2])
             continue
         if not _PROM_SAMPLE.match(line):
             raise ValueError(f"bad sample line {i + 1}: {line!r}")
         name = line.split("{")[0].split()[0]
-        if name not in typed:
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        if name not in typed and base not in histograms:
             raise ValueError(f"sample before TYPE for {name!r}")
         samples += 1
     if samples == 0:
@@ -305,16 +495,22 @@ def validate_chrome_trace(text: str) -> int:
     return len(events)
 
 
-def validate_dir(outdir) -> dict:
+def validate_dir(outdir, formats=("prom", "jsonl", "trace")) -> dict:
     """Validates every telemetry file under `outdir` (the CI
-    telemetry-smoke gate); requires at least one file of each format.
-    Returns {path: event/sample count}."""
+    telemetry-smoke gate); requires at least one file of each format
+    in `formats` (default: all three). Live-mode directories carry no
+    Chrome trace -- the serving-smoke gate passes
+    `formats=("prom", "jsonl")`. Returns {path: event/sample count}."""
     outdir = Path(outdir)
-    checks = {
-        "*.prom": validate_prometheus,
-        "*.jsonl": validate_jsonl,
-        "*.trace.json": validate_chrome_trace,
+    all_checks = {
+        "prom": ("*.prom", validate_prometheus),
+        "jsonl": ("*.jsonl", validate_jsonl),
+        "trace": ("*.trace.json", validate_chrome_trace),
     }
+    unknown = set(formats) - set(all_checks)
+    if unknown:
+        raise ValueError(f"unknown formats: {sorted(unknown)}")
+    checks = {all_checks[f][0]: all_checks[f][1] for f in formats}
     out = {}
     for pattern, fn in checks.items():
         paths = sorted(outdir.glob(pattern))

@@ -1,0 +1,211 @@
+"""Streaming taps: live TapSeries flushes out of running scans.
+
+The batch taps (taps.py) are effect-free by design: nothing leaves the
+device until the compiled call returns. This module is the opt-in
+escape hatch for watching a run WHILE it executes. Passing
+``telemetry=StreamConfig(flush_every=k)`` to any simulator keeps the
+per-slot tap arithmetic bit-identical to a ``TelemetryConfig`` run but
+restructures the recording scan into a scan of T//k chunks; after each
+chunk one ``jax.experimental.io_callback`` hands the stacked
+[k, ...] TapSeries slice (plus lane id and start slot) to a host-side
+``StreamChannel``. Consumers subscribe to the channel --
+``repro.telemetry.follow_run`` feeds the existing Prometheus/JSONL
+exporters from it -- and ``StreamChannel.series`` reassembles the full
+[T, ...] TapSeries bitwise-equal to the batch frame.
+
+Contract (DESIGN.md §Live observability):
+
+* values never change -- the scan body is the same `step_taps` program,
+  chunking reuses the stride-recording structure `_record_scan` already
+  proves bitwise-neutral, and the callback only *reads* the slice;
+* the flush is UNCONDITIONAL, once per chunk. A data-dependent
+  (`lax.cond`-gated) flush would put an IO effect inside `cond`, which
+  `vmap` (the fleet path) cannot batch; an unconditional callback
+  vmaps by expanding to one host call per lane, which is exactly the
+  per-lane delivery we want. Lanes carry an explicit `lane` tag in the
+  payload because the vmapped callback sees unbatched slices;
+* the streamed program is NOT effect-free. The jaxpr auditor only
+  tolerates `io_callback` on combos named in
+  `analysis.audit.EFFECTFUL_ALLOWLIST`; every other path must still
+  trace callback-free, so streaming can never leak into a default run.
+
+Callbacks may fire from XLA runtime threads: `StreamChannel` locks its
+buffer, and subscribers must be thread-safe (appending to a file is).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.telemetry.taps import TapSeries, TelemetryConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Opt-in streaming telemetry. Frozen + hashable like
+    TelemetryConfig: the whole config is a trace-time static, and two
+    equal configs trace the same program.
+
+    taps         the TelemetryConfig the in-scan taps run with (the
+                 streamed values are ITS TapSeries, untouched)
+    flush_every  slots per io_callback flush; must divide T. Larger
+                 values amortize the host hop -- the committed bench
+                 row holds the <10% overhead budget at >=16
+    channel      name of the host StreamChannel flushes land on
+    capacity     max buffered slices the channel retains (ring buffer;
+                 oldest dropped first). Subscribers see every flush
+                 regardless -- capacity only bounds replay memory.
+    """
+
+    taps: TelemetryConfig = TelemetryConfig()
+    flush_every: int = 16
+    channel: str = "default"
+    capacity: int = 4096
+
+    def __post_init__(self):
+        if self.flush_every < 1:
+            raise ValueError(
+                f"flush_every={self.flush_every} must be >= 1"
+            )
+
+
+def split_telemetry(telemetry):
+    """Normalizes a simulator's `telemetry` argument into
+    (TelemetryConfig | None, StreamConfig | None): plain configs run
+    batch-only, StreamConfig runs its `.taps` config plus flushes."""
+    if telemetry is None:
+        return None, None
+    if isinstance(telemetry, StreamConfig):
+        return telemetry.taps, telemetry
+    return telemetry, None
+
+
+class StreamChannel:
+    """Host-side landing zone for one stream of flushed slices.
+
+    Thread-safe: `push` runs inside io_callback on runtime threads.
+    Slices are kept (up to `capacity`, oldest dropped) for replay via
+    `series`; subscribers are invoked synchronously on every push.
+    """
+
+    def __init__(self, name: str, capacity: int = 4096):
+        self.name = name
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._slices: List[Tuple[int, int, TapSeries]] = []
+        self._subscribers: List[Callable] = []
+        self.flushes = 0
+        self.dropped = 0
+
+    def subscribe(self, fn: Callable) -> Callable:
+        """Registers fn(lane, t0, slice_) on every flush; returns fn."""
+        with self._lock:
+            self._subscribers.append(fn)
+        return fn
+
+    def unsubscribe(self, fn: Callable) -> None:
+        with self._lock:
+            if fn in self._subscribers:
+                self._subscribers.remove(fn)
+
+    def push(self, lane: int, t0: int, slice_: TapSeries) -> None:
+        with self._lock:
+            self.flushes += 1
+            self._slices.append((lane, t0, slice_))
+            while len(self._slices) > self.capacity:
+                self._slices.pop(0)
+                self.dropped += 1
+            subs = list(self._subscribers)
+        for fn in subs:
+            fn(lane, t0, slice_)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._slices.clear()
+            self.flushes = 0
+            self.dropped = 0
+
+    def lanes(self) -> List[int]:
+        with self._lock:
+            return sorted({lane for lane, _, _ in self._slices})
+
+    def series(self, lane: int = 0) -> TapSeries:
+        """Reassembles the buffered slices of one lane into the full
+        [T, ...] TapSeries, ordered by start slot -- bitwise equal to
+        the batch frame's series when no slice was dropped."""
+        with self._lock:
+            got = sorted(
+                (t0, s) for ln, t0, s in self._slices if ln == lane
+            )
+        if not got:
+            raise ValueError(
+                f"channel {self.name!r} holds no slices for lane {lane} "
+                f"(lanes seen: {self.lanes()})"
+            )
+        return TapSeries(*(
+            np.concatenate([np.asarray(getattr(s, f)) for _, s in got])
+            for f in TapSeries._fields
+        ))
+
+
+_CHANNELS: Dict[str, StreamChannel] = {}
+_CHANNELS_LOCK = threading.Lock()
+# One emit closure per channel name, cached so repeated traces of the
+# same StreamConfig close over the identical callable (jit-cache and
+# retrace-audit friendly).
+_EMITTERS: Dict[str, Callable] = {}
+
+
+def channel(name: str = "default",
+            capacity: int = 4096) -> StreamChannel:
+    """Returns (creating on first use) the named StreamChannel."""
+    with _CHANNELS_LOCK:
+        ch = _CHANNELS.get(name)
+        if ch is None:
+            ch = _CHANNELS[name] = StreamChannel(name, capacity)
+        return ch
+
+
+def reset_channel(name: str = "default") -> StreamChannel:
+    """Clears the named channel's buffer and counters (subscribers
+    stay); the idiom at the top of every streaming run."""
+    ch = channel(name)
+    ch.clear()
+    return ch
+
+
+def _emitter(name: str) -> Callable:
+    with _CHANNELS_LOCK:
+        fn = _EMITTERS.get(name)
+        if fn is None:
+            def fn(lane, t0, slice_):
+                channel(name).push(
+                    int(lane), int(t0), jax.tree.map(np.asarray, slice_)
+                )
+            _EMITTERS[name] = fn
+        return fn
+
+
+def stream_flush(cfg: StreamConfig, lane, t0, slice_: TapSeries) -> None:
+    """Called INSIDE the compiled chunk scan: hands the stacked
+    [flush_every, ...] TapSeries slice to the host channel. Unordered
+    (`ordered=True` cannot vmap, and the fleet path vmaps this), so
+    consumers must key on the payload's (lane, t0) -- slices may arrive
+    out of order and every event carries its slot index."""
+    channel(cfg.channel, cfg.capacity)  # exists before first flush
+    io_callback(_emitter(cfg.channel), None, lane, t0, slice_)
+
+
+__all__ = [
+    "StreamConfig",
+    "StreamChannel",
+    "channel",
+    "reset_channel",
+    "split_telemetry",
+    "stream_flush",
+]

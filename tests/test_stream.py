@@ -1,0 +1,300 @@
+"""Streaming-telemetry tests (repro.telemetry.stream).
+
+The standing anchors:
+
+* a StreamConfig run produces the SAME values as the equivalent
+  TelemetryConfig run -- every result field and every per-slot
+  Telemetry series bitwise, on every simulator variant and both score
+  backends (the f32 total_* roll-up gauges get 1 ulp of reassociation
+  slack: the chunked scan hands XLA a reshaped [T/k, k] reduction);
+* the host channel's reassembled series equal the batch frame bitwise
+  -- what streamed out IS what the scan computed, in every record mode;
+* `follow_run` (the live Prometheus/JSONL consumer) round-trips the
+  flushed slices bitwise and its outputs parse-validate;
+* fleet streaming tags flushes with the lane id: each lane's channel
+  series equals `lane(frame, i)` bitwise;
+* streaming OFF is the PR 8 program: `split_telemetry` hands back the
+  plain TelemetryConfig and no stream, and the default-path jaxpr
+  stays callback-free (the full audit gate lives in repro.analysis;
+  here we check the combos this layer registered onto the effectful
+  allowlist and that allow_io=False still rejects them).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import fleet_scenarios
+from repro.core import (
+    CarbonIntensityPolicy,
+    RandomCarbonSource,
+    UniformArrivals,
+    simulate,
+    simulate_fleet,
+)
+from repro.network import NetworkAwareDPPPolicy, star_graph
+from repro.faults import make_faults
+from repro.telemetry import (
+    StreamConfig,
+    TelemetryConfig,
+    channel,
+    follow_run,
+    lane,
+    reset_channel,
+    split_telemetry,
+    validate_jsonl,
+    validate_prometheus,
+)
+from repro.telemetry.taps import TapSeries
+
+jax.config.update("jax_enable_x64", False)
+
+T = 48
+M, N = 4, 3
+K_FLUSH = 16
+KINDS = ["plain", "wan", "faulted", "wan-faulted"]
+
+# f32 sums over the [T] series; XLA may reassociate the reduction when
+# the series arrives as reshaped [T/k, k] chunks (the series themselves
+# are asserted bitwise)
+REASSOC_GAUGES = frozenset({
+    "total_emissions", "total_arrived", "total_processed",
+    "total_failed", "total_wasted",
+})
+
+
+def _setup():
+    spec = fleet_scenarios._base(M, N)
+    return (
+        spec,
+        RandomCarbonSource(N=N),
+        UniformArrivals(M=M),
+        jax.random.PRNGKey(42),
+    )
+
+
+def _run(kind, telemetry, backend="reference", record="full"):
+    spec, src, arr, key = _setup()
+    interp = True if backend == "pallas" else None
+    kw = {}
+    if kind in ("wan", "wan-faulted"):
+        pol = NetworkAwareDPPPolicy(
+            V=0.05, score_backend=backend, score_interpret=interp
+        )
+        kw["graph"] = star_graph(M, N, np.random.default_rng(7))
+        if kind == "wan-faulted":
+            kw["faults"] = make_faults(
+                N, kw["graph"].L, task_p_fail=0.1,
+                link_p_down=0.2, link_p_up=0.5, link_floor=0.0,
+            )
+    else:
+        pol = CarbonIntensityPolicy(
+            V=0.05, score_backend=backend, score_interpret=interp
+        )
+        if kind == "faulted":
+            kw["faults"] = make_faults(
+                N, task_p_fail=0.1, cloud_p_down=0.1, cloud_p_up=0.5,
+                telem_p_down=0.1, telem_p_up=0.5,
+            )
+    return simulate(pol, spec, src, arr, T, key,
+                    telemetry=telemetry, record=record, **kw)
+
+
+def _assert_result_equal(a, b):
+    for field in type(a)._fields:
+        if field == "telemetry":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, field)), np.asarray(getattr(b, field)),
+            err_msg=field,
+        )
+    for field in type(a.telemetry)._fields:
+        x = np.asarray(getattr(a.telemetry, field))
+        y = np.asarray(getattr(b.telemetry, field))
+        if field in REASSOC_GAUGES:
+            np.testing.assert_allclose(x, y, rtol=1e-6, err_msg=field)
+        else:
+            np.testing.assert_array_equal(x, y, err_msg=field)
+
+
+def _assert_channel_matches(frame, series):
+    """Host-reassembled TapSeries vs the batch Telemetry frame."""
+    for field in TapSeries._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(series, field)),
+            np.asarray(getattr(frame, field)),
+            err_msg=field,
+        )
+
+
+class TestSplit:
+    def test_none_passthrough(self):
+        assert split_telemetry(None) == (None, None)
+
+    def test_plain_config_no_stream(self):
+        tcfg = TelemetryConfig()
+        assert split_telemetry(tcfg) == (tcfg, None)
+
+    def test_stream_config_splits(self):
+        scfg = StreamConfig(flush_every=8, channel="t")
+        tcfg, stream = split_telemetry(scfg)
+        assert tcfg == scfg.taps and stream is scfg
+
+    def test_flush_every_validated(self):
+        with pytest.raises(ValueError):
+            StreamConfig(flush_every=0)
+
+    def test_flush_must_divide_horizon(self):
+        with pytest.raises(ValueError):
+            _run("plain", StreamConfig(flush_every=7, channel="t-div"))
+
+    def test_stride_must_equal_flush(self):
+        with pytest.raises(ValueError):
+            _run("plain", StreamConfig(flush_every=8, channel="t-str"),
+                 record=16)
+
+
+class TestStreamingParity:
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_stream_equals_taps(self, kind):
+        name = f"t-par-{kind}"
+        reset_channel(name)
+        r_taps = _run(kind, TelemetryConfig())
+        r_stream = _run(
+            kind, StreamConfig(flush_every=K_FLUSH, channel=name)
+        )
+        _assert_result_equal(r_taps, r_stream)
+        _assert_channel_matches(
+            r_taps.telemetry, channel(name).series(0)
+        )
+
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    def test_both_score_backends(self, backend):
+        name = f"t-bk-{backend}"
+        reset_channel(name)
+        r_taps = _run("plain", TelemetryConfig(), backend=backend)
+        r_stream = _run(
+            "plain", StreamConfig(flush_every=K_FLUSH, channel=name),
+            backend=backend,
+        )
+        _assert_result_equal(r_taps, r_stream)
+        _assert_channel_matches(
+            r_taps.telemetry, channel(name).series(0)
+        )
+
+    @pytest.mark.parametrize("record", ["full", "summary", K_FLUSH])
+    def test_record_modes(self, record):
+        name = f"t-rec-{record}"
+        reset_channel(name)
+        r_taps = _run("plain", TelemetryConfig(), record=record)
+        r_stream = _run(
+            "plain", StreamConfig(flush_every=K_FLUSH, channel=name),
+            record=record,
+        )
+        _assert_result_equal(r_taps, r_stream)
+        _assert_channel_matches(
+            r_taps.telemetry, channel(name).series(0)
+        )
+
+    def test_flush_chunking_is_value_neutral(self):
+        """Different flush cadences stream identical values."""
+        a = "t-k8"
+        b = "t-k24"
+        reset_channel(a)
+        reset_channel(b)
+        _run("plain", StreamConfig(flush_every=8, channel=a))
+        _run("plain", StreamConfig(flush_every=24, channel=b))
+        sa = channel(a).series(0)
+        sb = channel(b).series(0)
+        for field in TapSeries._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sa, field)),
+                np.asarray(getattr(sb, field)), err_msg=field,
+            )
+        assert len(channel(a).lanes()) == 1
+
+
+class TestFleetLanes:
+    def test_lane_tagged_flushes(self):
+        name = "t-fleet"
+        reset_channel(name)
+        fleet = fleet_scenarios.build_fleet(
+            ["diurnal-slack"], per_kind=3, Tc=96, seed=0
+        )
+        res = simulate_fleet(
+            CarbonIntensityPolicy(V=0.05), fleet, T,
+            jax.random.PRNGKey(1), record="summary",
+            telemetry=StreamConfig(flush_every=K_FLUSH, channel=name),
+        )
+        ch = channel(name)
+        assert sorted(ch.lanes()) == list(range(fleet.F))
+        for i in range(fleet.F):
+            _assert_channel_matches(
+                lane(res.telemetry, i), ch.series(i)
+            )
+
+
+class TestFollowRun:
+    def test_live_export_roundtrip(self, tmp_path):
+        name = "t-follow"
+        reset_channel(name)
+        with follow_run(channel=name, outdir=tmp_path) as run:
+            r = _run(
+                "plain", StreamConfig(flush_every=K_FLUSH, channel=name)
+            )
+            paths = run.paths
+        assert run.slots == T and run.lanes() == [0]
+        _assert_channel_matches(r.telemetry, run.series(0))
+        events = paths["jsonl"].read_text()
+        assert validate_jsonl(events) == T + 1  # slots + summary
+        assert validate_prometheus(
+            paths["prometheus"].read_text()) > 0
+        # live totals reconcile with the batch frame
+        tot = run.totals()
+        np.testing.assert_allclose(
+            tot["total_emissions"],
+            float(r.telemetry.total_emissions), rtol=1e-6,
+        )
+
+    def test_consumer_without_outdir(self):
+        name = "t-mem"
+        reset_channel(name)
+        run = follow_run(channel=name)
+        r = _run(
+            "plain", StreamConfig(flush_every=K_FLUSH, channel=name)
+        )
+        run.close()
+        assert run.slots == T
+        _assert_channel_matches(r.telemetry, run.series(0))
+        assert validate_prometheus(run.to_prometheus()) > 0
+
+
+class TestAuditAllowlist:
+    def test_streaming_combos_registered(self):
+        from repro.analysis import audit
+
+        names = {c.name for c in audit.iter_combos()}
+        assert audit.EFFECTFUL_ALLOWLIST, "no streaming combos registered"
+        assert audit.EFFECTFUL_ALLOWLIST <= names
+        assert any("+stream" in n for n in audit.EFFECTFUL_ALLOWLIST)
+
+    def test_allowlist_gates_io(self):
+        from repro.analysis import audit
+
+        combo = next(
+            c for c in audit.iter_combos()
+            if c.name in audit.EFFECTFUL_ALLOWLIST
+        )
+        assert audit.audit_combo(combo, allow_io=True) == []
+        findings = audit.audit_combo(combo, allow_io=False)
+        assert findings and all(
+            f.check == "effects" for f in findings
+        )
+
+    def test_default_path_still_pure(self):
+        from repro.analysis import audit
+
+        combo = next(
+            c for c in audit.iter_combos()
+            if c.name not in audit.EFFECTFUL_ALLOWLIST
+        )
+        assert audit.audit_combo(combo, allow_io=False) == []
