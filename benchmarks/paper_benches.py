@@ -927,6 +927,205 @@ def bench_stream_overhead() -> List[Row]:
     ]
 
 
+def bench_deadline_pareto() -> List[Row]:
+    """Deadline/SLO layer (repro.deadlines): the emission-vs-miss-vs-
+    waiting Pareto on the diurnal-slack fleet, plus graceful shedding
+    under engineered overload. Row families:
+
+      deadline/slack/<pol>           us_per_call per lane-slot,
+                                     derived = % cumulative-emission
+                                     reduction vs the myopic carbon
+                                     policy (the bench_forecast
+                                     baseline) on the generous-slack
+                                     deadline fleet;
+      deadline/slack/<pol>/missed    derived = deadline misses as % of
+                                     admitted tasks;
+      deadline/slack/<pol>/waiting   derived = added waiting: final
+                                     backlog as % of the myopic
+                                     baseline's (the price of
+                                     deferral);
+      deadline/overload/...          the overload arrival scenario with
+                                     tight deadlines: the unshedded
+                                     lane misses, the admission-control
+                                     lane (shed-overload, 0.6 headroom)
+                                     sheds instead; derived = misses
+                                     (unshedded) / sheds (shed lane) as
+                                     % of offered load;
+      deadline/overload+blackout/... the same shed lane through a
+                                     regional blackout under the
+                                     staleness guard -- shed, don't
+                                     diverge.
+
+    Before any timing, the infinite-deadline anchor is asserted on both
+    score backends: the slack policy on a no_deadlines() fleet is
+    bitwise the plain LookaheadDPPPolicy run (a deadline layer that
+    perturbs the unconstrained schedule can never post a number).
+    Full-size runs assert the ISSUE acceptance: at least one
+    deadline-aware policy reaches >= 90% of LookaheadDPP's emission
+    reduction with ZERO misses on generous slack; shedding holds
+    misses at 0 on the overload scenario where the unshedded baseline
+    misses; and the overload+blackout lane sheds rather than letting
+    backlog diverge.
+    """
+    from repro.configs.fleet_scenarios import (
+        build_fleet, with_deadlines, with_faults,
+    )
+    from repro.core import LookaheadDPPPolicy, simulate_fleet
+    from repro.deadlines import (
+        EDDPolicy, SlackThresholdPolicy, WaitAwhilePolicy,
+        no_deadlines, stack_deadlines,
+    )
+    from repro.faults import StalenessGuardPolicy
+    from repro.forecast import ClairvoyantTableForecaster
+
+    V = 0.2
+    per_kind, T = (2, 24) if SMOKE else (16, 192)
+    H = 4 if SMOKE else 16
+    key = jax.random.PRNGKey(SEED)
+    fleet = build_fleet(["diurnal-slack"], per_kind=per_kind, Tc=96,
+                        seed=SEED)
+    F = fleet.F
+    fc = ClairvoyantTableForecaster(H=H)
+    rows: List[Row] = []
+
+    def inf_deadlines(flt):
+        M = flt.arrival_amax.shape[1]
+        return flt._replace(
+            deadlines=stack_deadlines([no_deadlines(M)] * flt.F)
+        )
+
+    # infinite-deadline bitwise anchor on both backends, before timing
+    for backend in ("reference", "pallas"):
+        plain = jax.jit(lambda b=backend: simulate_fleet(
+            LookaheadDPPPolicy(V=V, H=H, score_backend=b),
+            fleet, T, key, forecaster=fc, record="summary"))()
+        anchored = jax.jit(lambda b=backend: simulate_fleet(
+            SlackThresholdPolicy(V=V, H=H, score_backend=b),
+            inf_deadlines(fleet), T, key, forecaster=fc,
+            record="summary"))()
+        np.testing.assert_array_equal(
+            np.asarray(plain.cum_emissions),
+            np.asarray(anchored.cum_emissions),
+            err_msg=f"infinite-deadline anchor broke ({backend})",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(plain.Qe[:, -1]), np.asarray(anchored.Qe[:, -1]),
+            err_msg=f"infinite-deadline anchor broke ({backend})",
+        )
+
+    def run(pol, flt, forecaster=None):
+        f = jax.jit(lambda: simulate_fleet(
+            pol, flt, T, key, forecaster=forecaster, record="summary"
+        ))
+        f()  # compile
+        best, res = np.inf, None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res = f()
+            jax.block_until_ready(res.cum_emissions)
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6, res
+
+    def backlog(res):
+        return np.asarray(
+            res.Qe[:, -1].sum(-1) + res.Qc[:, -1].sum((-2, -1))
+        )
+
+    # -- generous-slack Pareto: emissions vs misses vs added waiting --
+    _, r_base = run(CarbonIntensityPolicy(V=V), fleet)
+    em_base = np.asarray(r_base.cum_emissions[:, -1])
+    bl_base = backlog(r_base).mean()
+    _, r_la = run(LookaheadDPPPolicy(V=V, H=H), fleet, forecaster=fc)
+    red_la = float(
+        100.0 * (1.0 - np.asarray(r_la.cum_emissions[:, -1]) / em_base
+                 ).mean()
+    )
+    rows.append((f"deadline/slack/lookahead_H{H}", 0.0, red_la))
+
+    slack = with_deadlines(fleet, "generous-slack", seed=SEED)
+    stats = {}
+    for name, pol, fcast in [
+        ("slack_thresh", SlackThresholdPolicy(V=V, H=H), fc),
+        ("waitawhile", WaitAwhilePolicy(V=V, H=H, J=2), fc),
+        ("edd", EDDPolicy(), None),
+    ]:
+        us, r = run(pol, slack, forecaster=fcast)
+        red = float(
+            100.0 * (1.0 - np.asarray(r.cum_emissions[:, -1]) / em_base
+                     ).mean()
+        )
+        missed = float(np.asarray(r.deadlines.missed).sum())
+        admitted = float(np.asarray(r.deadlines.admitted).sum())
+        miss_pct = 100.0 * missed / max(admitted, 1.0)
+        wait_pct = float(100.0 * backlog(r).mean() / max(bl_base, 1.0))
+        stats[name] = (red, missed)
+        rows.append((f"deadline/slack/{name}", us / (F * T), red))
+        rows.append((f"deadline/slack/{name}/missed", 0.0, miss_pct))
+        rows.append((f"deadline/slack/{name}/waiting", 0.0, wait_pct))
+    if not SMOKE:
+        # acceptance: a deadline-aware policy matches >= 90% of the
+        # unconstrained lookahead reduction at ZERO misses
+        best = max(
+            (red for red, missed in stats.values() if missed == 0.0),
+            default=-np.inf,
+        )
+        assert best >= 0.9 * red_la, (
+            f"no zero-miss deadline policy reached 90% of lookahead's "
+            f"reduction ({best:.1f}% vs {red_la:.1f}%)"
+        )
+
+    # -- overload: shedding holds misses at 0 where the unshedded
+    # baseline misses ------------------------------------------------
+    over = build_fleet(["overload"], per_kind=per_kind, Tc=96, seed=SEED)
+    Fo = over.F
+    pol = SlackThresholdPolicy(V=V)
+    us_u, r_u = run(pol, with_deadlines(over, "tight-uniform",
+                                        seed=SEED))
+    us_s, r_s = run(pol, with_deadlines(over, "shed-overload",
+                                        seed=SEED))
+    offered = float(
+        np.asarray(r_u.deadlines.admitted).sum()
+        + np.asarray(r_u.deadlines.shed).sum()
+    )
+    miss_u = float(np.asarray(r_u.deadlines.missed).sum())
+    miss_s = float(np.asarray(r_s.deadlines.missed).sum())
+    shed_s = float(np.asarray(r_s.deadlines.shed).sum())
+    rows.append(("deadline/overload/unshedded", us_u / (Fo * T),
+                 100.0 * miss_u / max(offered, 1.0)))
+    rows.append(("deadline/overload/shed", us_s / (Fo * T),
+                 100.0 * shed_s / max(offered, 1.0)))
+    rows.append(("deadline/overload/shed/missed", 0.0,
+                 100.0 * miss_s / max(offered, 1.0)))
+    if not SMOKE:
+        assert miss_u > 0.0, "overload scenario no longer induces misses"
+        assert miss_s == 0.0, (
+            f"admission control failed to hold misses at 0 under "
+            f"overload ({miss_s:.0f} missed)"
+        )
+
+    # -- overload + blackout: shed, don't diverge --------------------
+    guard = StalenessGuardPolicy(inner=SlackThresholdPolicy(V=V))
+    blk = with_faults(over, "regional-blackout", seed=SEED)
+    us_b, r_bu = run(guard, with_deadlines(blk, "tight-uniform",
+                                           seed=SEED))
+    us_bs, r_bs = run(guard, with_deadlines(blk, "shed-overload",
+                                            seed=SEED))
+    shed_b = float(np.asarray(r_bs.deadlines.shed).sum())
+    bl_u = float(np.asarray(r_bu.backlog)[:, -1].mean())
+    bl_s = float(np.asarray(r_bs.backlog)[:, -1].mean())
+    rows.append(("deadline/overload+blackout/shed", us_bs / (Fo * T),
+                 100.0 * shed_b / max(offered, 1.0)))
+    rows.append(("deadline/overload+blackout/backlog_vs_unshedded",
+                 0.0, 100.0 * bl_s / max(bl_u, 1.0)))
+    if not SMOKE:
+        assert shed_b > 0.0, "blackout overload lane shed nothing"
+        assert bl_s < bl_u, (
+            f"shedding did not bound the blackout backlog "
+            f"({bl_s:.0f} vs {bl_u:.0f})"
+        )
+    return rows
+
+
 def bench_serve_latency() -> List[Row]:
     """Serving-loop decision latency (repro.serve): the per-slot
     scheduling decision run as a host loop around one donated-buffer
@@ -993,5 +1192,6 @@ ALL_BENCHES = [
     bench_fault_robustness,
     bench_telemetry_overhead,
     bench_stream_overhead,
+    bench_deadline_pareto,
     bench_serve_latency,
 ]

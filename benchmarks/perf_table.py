@@ -144,6 +144,52 @@ def render(rows) -> str:
                 f"| {r['derived']:+.1f}% |"
             )
 
+    # deadline/SLO Pareto (PR 10): emission reduction vs misses vs
+    # added waiting per deadline-aware policy on the generous-slack
+    # fleet, plus the overload shedding rows
+    slack = sorted(
+        r["name"][len("deadline/slack/"):]
+        for r in rows
+        if r["name"].startswith("deadline/slack/")
+        and r["name"].count("/") == 2
+    )
+    if slack:
+        lines.append("")
+        lines.append(
+            "| deadline Pareto (generous slack) | us / lane-slot "
+            "| emissions vs myopic | missed | added waiting |"
+        )
+        lines.append("|---|---|---|---|---|")
+        for stem in slack:
+            main = by_name[f"deadline/slack/{stem}"]
+            miss = by_name.get(f"deadline/slack/{stem}/missed")
+            wait = by_name.get(f"deadline/slack/{stem}/waiting")
+            us = main["us_per_call"]
+            us_s = "-" if us == 0.0 else f"{us:.2f} us"
+            miss_s = "-" if miss is None else f"{miss['derived']:.2f}%"
+            wait_s = "-" if wait is None else f"{wait['derived']:.0f}%"
+            lines.append(
+                f"| {stem} | {us_s} | {-main['derived']:+.1f}% "
+                f"| {miss_s} | {wait_s} |"
+            )
+    over = [
+        r for r in rows if r["name"].startswith("deadline/overload")
+    ]
+    if over:
+        lines.append("")
+        lines.append(
+            "| overload shedding | us / lane-slot "
+            "| % of offered load |"
+        )
+        lines.append("|---|---|---|")
+        for r in sorted(over, key=lambda r: r["name"]):
+            us = r["us_per_call"]
+            lines.append(
+                f"| {r['name'][len('deadline/'):]} "
+                f"| {'-' if us == 0.0 else f'{us:.2f} us'} "
+                f"| {r['derived']:.1f}% |"
+            )
+
     # serving loop (PR 9): decision-latency percentiles + throughput
     # from the row's EXTRAS["latency"] columns
     serve = [r for r in rows if r["name"].startswith("serve/")]

@@ -289,6 +289,53 @@ def iter_combos(per_kind: int = AUDIT_PER_KIND) -> List[Combo]:
             record=record, telemetry=tcfg,
         ))
 
+    # Deadline-layer combos (repro.deadlines): stacked DeadlineParams
+    # put the [M, D] age rings and the mu estimator into the scan carry
+    # and three new policies (with a deadline_view kwarg) onto the
+    # traced path -- both score backends, the guarded+faulted
+    # composition, shedding under overload, and a taps-on run all pass
+    # the same gates (carry dtypes, weak types, x64 re-trace, retrace
+    # signatures, effect freedom) as every other combo.
+    from repro.configs.fleet_scenarios import with_deadlines
+    from repro.deadlines import (
+        EDDPolicy,
+        SlackThresholdPolicy,
+        WaitAwhilePolicy,
+    )
+    from repro.forecast import SeasonalNaiveForecaster
+
+    tight = with_deadlines(base, "tight-uniform")
+    shed = with_deadlines(fleets["overload"], "shed-overload")
+    tight_blackout = with_deadlines(blackout, "tight-uniform")
+    fc4 = SeasonalNaiveForecaster(H=4, period=6)
+    deadline_combos = [
+        ("slack/reference", lambda: SlackThresholdPolicy(),
+         "tight-uniform", tight, "full", None, None),
+        ("slack/pallas",
+         lambda: SlackThresholdPolicy(score_backend="pallas"),
+         "tight-uniform", tight, "full", None, None),
+        ("edd", lambda: EDDPolicy(),
+         "tight-uniform", tight, "full", None, None),
+        ("waitawhile/reference", lambda: WaitAwhilePolicy(H=4),
+         "tight-uniform", tight, "full", fc4, None),
+        ("ci/reference", lambda: CarbonIntensityPolicy(),
+         "overload+shed", shed, "summary", None, None),
+        ("guard-slack/reference",
+         lambda: StalenessGuardPolicy(SlackThresholdPolicy()),
+         "tight-uniform+regional-blackout", tight_blackout, "full",
+         None, None),
+        ("slack/reference", lambda: SlackThresholdPolicy(),
+         "tight-uniform+taps", tight, "full", None, tcfg),
+    ]
+    for policy_key, make, scen, fleet, record, fcst, tel in \
+            deadline_combos:
+        combos.append(Combo(
+            name=f"{policy_key}@{scen}",
+            policy_key=policy_key, scenario=scen,
+            make_policy=make, forecaster=fcst, fleet=fleet,
+            record=record, telemetry=tel,
+        ))
+
     # Streaming-telemetry combos (repro.telemetry.stream): the ONLY
     # registry entries whose traced program may carry an io_callback.
     # Each name is registered in EFFECTFUL_ALLOWLIST; audit_all traces

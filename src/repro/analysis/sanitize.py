@@ -191,6 +191,34 @@ def sanitize_smoke(T: int = SMOKE_T) -> List[Tuple[str, str | None]]:
 
     cases.append(("single/paper-spec+faults/guard-ci", single_faulted))
 
+    # deadline layer with the full check set: slack math runs through
+    # +inf (empty queues / no deadline) and the admission cap through
+    # an inf branch -- both must stay NaN- and div-by-zero-free with
+    # shedding active, and the age-ring scatter in-bounds
+    def single_deadlines():
+        import numpy as np
+
+        from repro.deadlines import SlackThresholdPolicy, make_deadlines
+
+        dl = make_deadlines(
+            spec.M,
+            deadline=np.array([1.0, 3.0, np.inf, 2.0, np.inf],
+                              np.float32)[: spec.M],
+            window=2.0, shed_on=1.0, headroom=0.8,
+        )
+
+        def run(k):
+            return simulate(
+                SlackThresholdPolicy(), spec,
+                RandomCarbonSource(N=spec.N),
+                UniformArrivals(M=spec.M), T, k, deadlines=dl,
+            )
+
+        return jax.jit(checkify.checkify(run, errors=DEFAULT_CHECKS))(key)
+
+    cases.append(("single/paper-spec+deadlines/slack-shed",
+                  single_deadlines))
+
     results: List[Tuple[str, str | None]] = []
     for name, runner in cases:
         try:

@@ -106,6 +106,18 @@ def diurnal_slack(
     return spec, diurnal_table(Tc, N, rng, amp=110.0, noise=15.0), amax
 
 
+def overload(M: int, N: int, Tc: int, rng: np.random.Generator) -> Instance:
+    """Offered load ~1.8x the plain diurnal scenario (which already runs
+    near saturation): no policy can clear these queues, so backlog grows
+    without bound unless the deadline layer's admission control sheds.
+    The graceful-overload scenario for `with_deadlines` + `shed_on`."""
+    spec = _base(M, N)
+    amax = np.round(
+        1.8 * A_MAX * rng.uniform(0.9, 1.1, M)
+    ).astype(np.float32)
+    return spec, diurnal_table(Tc, N, rng), amax
+
+
 def multi_region_uk(
     M: int, N: int, Tc: int, rng: np.random.Generator
 ) -> Instance:
@@ -124,6 +136,7 @@ SCENARIOS: Dict[str, Callable[..., Instance]] = {
     "bursty": bursty,
     "heterogeneous-fleet": heterogeneous_fleet,
     "multi-region-uk": multi_region_uk,
+    "overload": overload,
 }
 
 
@@ -344,6 +357,99 @@ def with_faults(
         for j in range(fleet.F)
     ]
     return fleet._replace(faults=stack_faults(params))
+
+
+# ---------------------------------------------------------------------------
+# Deadline scenario registry (repro.deadlines). Each generator returns
+# one lane's DeadlineParams from an instance-local RNG; `with_deadlines`
+# stacks per-lane draws onto a fleet's `deadlines` axis (exactly the
+# `with_faults` pattern, disjoint RNG stream (seed, 11, j)).
+#
+#   * tight-uniform -- every type gets a small finite deadline (2..6
+#     extra slots) and a matching WaitAwhile window; shedding off: the
+#     pure deadline-pressure scenario.
+#   * mixed-slo     -- roughly half the types carry tight deadlines
+#     (batch/interactive split); the rest are deadline-free. Windows
+#     follow deadlines.
+#   * shed-overload -- tight deadlines with admission control ON at
+#     0.6 headroom: the graceful-degradation scenario (pair with the
+#     "overload" arrival scenario above). 0.6 absorbs the per-type
+#     service-allocation volatility under 1.8x overload -- at 0.8 the
+#     EWMA rate estimate admits bursts the fill contest then starves,
+#     leaving ~0.1% of admitted tasks to expire; the bench asserts
+#     shedding holds misses at exactly zero.
+#   * generous-slack -- deadlines wider than the waiting the benched
+#     policies actually induce (48..59 extra slots on 64 rings; the
+#     full-size LookaheadDPP tail age is ~37 slots): deferral stays
+#     free everywhere, so a deadline-aware policy should recover the
+#     unconstrained LookaheadDPP emission schedule while still
+#     guaranteeing zero misses (the bench_deadline_pareto acceptance).
+
+
+def tight_uniform(M: int, rng: np.random.Generator):
+    from repro.deadlines import make_deadlines
+
+    d = rng.integers(2, 7, M).astype(np.float32)
+    return make_deadlines(M, deadline=d, window=d)
+
+
+def mixed_slo(M: int, rng: np.random.Generator):
+    from repro.deadlines import make_deadlines
+
+    tight = rng.random(M) < 0.5
+    d = np.where(
+        tight, rng.integers(1, 5, M).astype(np.float32), np.inf
+    ).astype(np.float32)
+    return make_deadlines(M, deadline=d, window=d)
+
+
+def shed_overload(M: int, rng: np.random.Generator):
+    from repro.deadlines import make_deadlines
+
+    d = rng.integers(2, 5, M).astype(np.float32)
+    return make_deadlines(
+        M, deadline=d, window=d, shed_on=1.0, headroom=0.6
+    )
+
+
+def generous_slack(M: int, rng: np.random.Generator):
+    from repro.deadlines import make_deadlines
+
+    d = rng.integers(48, 60, M).astype(np.float32)
+    return make_deadlines(M, D=64, deadline=d, window=d)
+
+
+DEADLINE_SCENARIOS: Dict[str, Callable] = {
+    "tight-uniform": tight_uniform,
+    "mixed-slo": mixed_slo,
+    "shed-overload": shed_overload,
+    "generous-slack": generous_slack,
+}
+
+
+def with_deadlines(
+    fleet: FleetScenario, kind: str, seed: int = 0
+) -> FleetScenario:
+    """Attaches per-lane draws of a named deadline scenario to a fleet
+    (stacked on the `deadlines` axis). Lane j draws from
+    default_rng((seed, 11, j)) -- disjoint from the instance and fault
+    streams, so the same fleet is comparable with and without the
+    deadline layer."""
+    from repro.deadlines import stack_deadlines
+
+    try:
+        gen = DEADLINE_SCENARIOS[kind]
+    except KeyError:
+        raise KeyError(
+            f"unknown deadline scenario {kind!r}; registered: "
+            f"{sorted(DEADLINE_SCENARIOS)}"
+        ) from None
+    M = fleet.arrival_amax.shape[1]
+    params = [
+        gen(M, np.random.default_rng((seed, 11, j)))
+        for j in range(fleet.F)
+    ]
+    return fleet._replace(deadlines=stack_deadlines(params))
 
 
 def build_fleet(

@@ -36,8 +36,8 @@ class ThresholdPolicy:
     threshold: float = 200.0
 
     def __call__(self, state, spec, Ce, Cc, arrivals, key=None,
-                 fault_view=None):
-        del fault_view
+                 fault_view=None, deadline_view=None):
+        del fault_view, deadline_view
         base = QueueLengthPolicy()(state, spec, Ce, Cc, arrivals, key)
         gate = (Cc < self.threshold).astype(jnp.float32)[None, :]
         return Action(d=base.d, w=base.w * gate)

@@ -19,7 +19,10 @@ policies only clip d by the current Qe, matching the pseudocode.
 Every policy also accepts a `fault_view=` kwarg (a repro.faults
 FaultView, passed by the faulted simulators) and deliberately ignores
 it: base policies model the fair-weather scheduler, and all graceful
-degradation lives in repro.faults.guard.StalenessGuardPolicy.
+degradation lives in repro.faults.guard.StalenessGuardPolicy. The same
+convention covers `deadline_view=` (a repro.deadlines DeadlineView,
+passed by deadline-threaded simulators): base policies ignore it, and
+urgency/deferral behavior lives in repro.deadlines.policy.
 
 Notes vs. the paper's pseudocode (documented in DESIGN.md):
   * The edge branch of Algorithm 1 prints `P <- P - floor(P/pe)*pe` while
@@ -294,8 +297,9 @@ class CarbonIntensityPolicy:
         arrivals: Array,
         key: Array | None = None,
         fault_view=None,
+        deadline_view=None,
     ) -> Action:
-        del arrivals, key, fault_view
+        del arrivals, key, fault_view, deadline_view
         pe, pc, Pe, Pc = spec.as_arrays()
         V = jnp.asarray(self.V, jnp.float32)
 
@@ -368,8 +372,9 @@ class LookaheadDPPPolicy(CarbonIntensityPolicy):
         key: Array | None = None,
         forecast: Array | None = None,
         fault_view=None,
+        deadline_view=None,
     ) -> Action:
-        del fault_view
+        del fault_view, deadline_view
         Ce_eff, Cc_eff = self.effective_intensities(Ce, Cc, forecast)
         return super().__call__(state, spec, Ce_eff, Cc_eff, arrivals, key)
 
@@ -396,8 +401,9 @@ class QueueLengthPolicy:
         arrivals: Array,
         key: Array | None = None,
         fault_view=None,
+        deadline_view=None,
     ) -> Action:
-        del Ce, Cc, arrivals, key, fault_view
+        del Ce, Cc, arrivals, key, fault_view, deadline_view
         pe, pc, Pe, Pc = spec.as_arrays()
         n1 = jnp.argmin(state.Qc, axis=1)
 
@@ -436,8 +442,9 @@ class RandomPolicy:
         arrivals: Array,
         key: Array,
         fault_view=None,
+        deadline_view=None,
     ) -> Action:
-        del Ce, Cc, arrivals, fault_view
+        del Ce, Cc, arrivals, fault_view, deadline_view
         pe, pc, Pe, Pc = spec.as_arrays()
         kd, kw = jax.random.split(key)
         # Random fractions of per-type feasible maxima, scaled to respect
@@ -473,8 +480,9 @@ class ExactDPPPolicy:
         arrivals: Array,
         key: Array | None = None,
         fault_view=None,
+        deadline_view=None,
     ) -> Action:
-        del arrivals, key, fault_view
+        del arrivals, key, fault_view, deadline_view
         from repro.core.knapsack import bounded_knapsack_min
 
         pe, pc, Pe, Pc = spec.as_arrays()

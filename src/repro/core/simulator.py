@@ -100,6 +100,7 @@ class SimResult(NamedTuple):
     energy_edge: Array    # [T] edge energy spent
     energy_cloud: Array   # [T, N] cloud energy spent
     telemetry: object = None  # repro.telemetry.Telemetry frame, or None
+    deadlines: object = None  # repro.deadlines.DeadlineLedger, or None
 
     # R depends on the `record` mode: T for "full" (every slot), 1 for
     # "summary" (final state only), T//k for stride k (state at the end
@@ -252,6 +253,7 @@ def simulate(
     faults=None,
     telemetry=None,
     stream_lane=None,
+    deadlines=None,
 ) -> SimResult:
     """Runs the network for T slots under `policy`.
 
@@ -309,6 +311,17 @@ def simulate(
     the traced program carries an io_callback, so only audit-allowlisted
     combos may stream. `stream_lane` tags those flushes with the fleet
     lane id (set by `simulate_fleet`; defaults to lane 0).
+
+    When `deadlines` (a repro.deadlines.DeadlineParams) is given, the
+    age-ringed deadline state joins the scan carry: the policy is
+    called with a `deadline_view=` kwarg, overdue tasks expire into the
+    result's `.deadlines` ledger (missed/shed/admitted series plus the
+    recorded `Qd` rings), admission control may shed arrivals, and the
+    telemetry probe's missed/shed fields go live. With
+    `deadlines=no_deadlines(M)` (all-infinite, shedding off) every
+    shared result field is bitwise-identical to the `deadlines=None`
+    run -- the subsystem's standing parity anchor
+    (tests/test_deadlines.py).
     """
     if graph is not None:
         from repro.network.sim import simulate_network
@@ -318,6 +331,7 @@ def simulate(
             state0=state0, forecaster=forecaster,
             error_params=error_params, record=record, faults=faults,
             telemetry=telemetry, stream_lane=stream_lane,
+            deadlines=deadlines,
         )
     if faults is not None:
         from repro.faults.sim import simulate_faulted
@@ -327,11 +341,19 @@ def simulate(
             state0=state0, forecaster=forecaster,
             error_params=error_params, record=record,
             telemetry=telemetry, stream_lane=stream_lane,
+            deadlines=deadlines,
         )
     telemetry, stream = split_telemetry(telemetry)
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
         state0 = init_state(spec.M, spec.N)
+    if deadlines is not None:
+        from repro.deadlines.model import (
+            DeadlineLedger,
+            deadline_view,
+            init_deadlines,
+            step_deadlines,
+        )
     k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
 
     if forecaster is not None:
@@ -340,22 +362,42 @@ def simulate(
         )
 
     def body(carry, t):
-        state, fcarry, tap = carry
+        state, fcarry, tap, dstate = carry
         Ce, Cc = carbon_source(t, k_carbon)
         a = arrival_source(t, k_arrive)
         k_t = jax.random.fold_in(k_policy, t)
+        pkw = {}
+        if deadlines is not None:
+            pkw["deadline_view"] = deadline_view(deadlines, dstate)
         if forecaster is None:
-            act: Action = policy(state, spec, Ce, Cc, a, k_t)
+            act: Action = policy(state, spec, Ce, Cc, a, k_t, **pkw)
         else:
             fcarry = forecaster.update(
                 fcarry, jnp.concatenate([Ce[None], Cc])
             )
             act = policy(
                 state, spec, Ce, Cc, a, k_t,
-                forecast=forecaster.predict(fcarry, t),
+                forecast=forecaster.predict(fcarry, t), **pkw,
             )
         C_t = emissions(spec, act, Ce, Cc)
-        nxt = step(state, act, a)
+        if deadlines is None:
+            nxt = step(state, act, a)
+            missed = shed = jnp.float32(0.0)
+        else:
+            d_sum = jnp.sum(act.d, axis=1)
+            dstate, admitted, expired, shed_v = step_deadlines(
+                deadlines, dstate, d_sum, a
+            )
+            # Same queue update as `step`, with arrivals replaced by
+            # (admitted - expired): bitwise `+ a` under the
+            # no_deadlines anchor (admitted == a, expired == +0.0).
+            nxt = NetworkState(
+                Qe=jnp.maximum(state.Qe - d_sum, 0.0)
+                + admitted - expired,
+                Qc=jnp.maximum(state.Qc - act.w, 0.0) + act.d,
+            )
+            missed = jnp.sum(expired)
+            shed = jnp.sum(shed_v)
         out = (
             C_t,
             jnp.sum(act.d),
@@ -363,8 +405,10 @@ def simulate(
             jnp.sum(act.d * pe[:, None]),
             jnp.sum(act.w * pc, axis=0),
         )
+        if deadlines is not None:
+            out = out + (missed, shed, jnp.sum(admitted))
         if telemetry is None:
-            return (nxt, fcarry, tap), out
+            return (nxt, fcarry, tap, dstate), out
         probe = TelemetryProbe(
             emissions=C_t,
             arrived=jnp.sum(a),
@@ -377,24 +421,42 @@ def simulate(
             clouds_down=jnp.float32(0.0),
             retry_depth=jnp.float32(0.0),
             transfer_occupancy=jnp.float32(0.0),
+            missed=missed,
+            shed=shed,
         )
         tap, tseries = step_taps(telemetry, tap, probe)
-        return (nxt, fcarry, tap), (out, tseries)
+        return (nxt, fcarry, tap, dstate), (out, tseries)
 
     carry0 = (
         state0,
         fcarry0 if forecaster is not None else (),
         init_taps() if telemetry is not None else (),
+        init_deadlines(spec.M, deadlines.rings.shape[-1])
+        if deadlines is not None else (),
     )
-    scalars, (Qe, Qc) = _record_scan(
-        body, lambda carry: (carry[0].Qe, carry[0].Qc), carry0, T,
+    if deadlines is None:
+        state_of = lambda carry: (carry[0].Qe, carry[0].Qc)  # noqa: E731
+    else:
+        state_of = lambda carry: (  # noqa: E731
+            carry[0].Qe, carry[0].Qc, carry[3].Qd
+        )
+    scalars, states = _record_scan(
+        body, state_of, carry0, T,
         record, stream=stream, lane=stream_lane,
     )
     if telemetry is None:
-        (C, disp, proc, ee, ec), tel = scalars, None
+        scal, tel = scalars, None
     else:
-        (C, disp, proc, ee, ec), tseries = scalars
+        scal, tseries = scalars
         tel = finalize_taps(telemetry, tseries)
+    if deadlines is None:
+        (C, disp, proc, ee, ec) = scal
+        (Qe, Qc), led = states, None
+    else:
+        (C, disp, proc, ee, ec, missed, shed, adm) = scal
+        Qe, Qc, Qd = states
+        led = DeadlineLedger(missed=missed, shed=shed, admitted=adm,
+                             Qd=Qd)
     return SimResult(
         emissions=C,
         cum_emissions=jnp.cumsum(C),
@@ -405,6 +467,7 @@ def simulate(
         energy_edge=ee,
         energy_cloud=ec,
         telemetry=tel,
+        deadlines=led,
     )
 
 
@@ -462,6 +525,11 @@ class FleetScenario(NamedTuple):
                    result is a FaultSimResult / NetFaultSimResult. See
                    configs.fleet_scenarios.with_faults for the scenario
                    registry.
+      deadlines -- stacked repro.deadlines.DeadlineParams (leading axis
+                   F): every lane simulates through the deadline layer
+                   (expiry, admission control, `deadline_view=` to the
+                   policy) and the result carries a DeadlineLedger. See
+                   configs.fleet_scenarios.with_deadlines.
     """
 
     spec: FleetSpec
@@ -471,6 +539,7 @@ class FleetScenario(NamedTuple):
     err_bias: Array | None = None     # [F] forecast bias per lane
     err_noise: Array | None = None    # [F] forecast noise per lane
     faults: object | None = None      # stacked FaultParams or None
+    deadlines: object | None = None   # stacked DeadlineParams or None
 
     @property
     def F(self) -> int:
@@ -567,7 +636,8 @@ def simulate_fleet(
     streaming = split_telemetry(telemetry)[1] is not None
     lanes = jnp.arange(F, dtype=jnp.int32) if streaming else None
 
-    def one(pe, pc, Pe, Pc, ctab, amax, k, graph, err, faults, lane):
+    def one(pe, pc, Pe, Pc, ctab, amax, k, graph, err, faults, dl,
+            lane):
         spec = NetworkSpec(pe=pe, pc=pc, Pe=Pe, Pc=Pc)
         # TableCarbonSource traces fine with a batched ctab; its .table
         # attribute is also how simulate() hands each lane's slab to
@@ -583,7 +653,7 @@ def simulate_fleet(
             policy, spec, carbon_source, arrival_source, T, k,
             forecaster=forecaster, graph=graph, error_params=err,
             record=record, faults=faults, telemetry=telemetry,
-            stream_lane=lane,
+            stream_lane=lane, deadlines=dl,
         )
 
     err = (
@@ -596,11 +666,12 @@ def simulate_fleet(
                  0 if fleet.graph is not None else None,
                  0 if err is not None else None,
                  0 if fleet.faults is not None else None,
+                 0 if fleet.deadlines is not None else None,
                  0 if streaming else None),
     )(
         fleet.spec.pe, fleet.spec.pc, fleet.spec.Pe, fleet.spec.Pc,
         fleet.carbon, fleet.arrival_amax, keys, fleet.graph, err,
-        fleet.faults, lanes,
+        fleet.faults, fleet.deadlines, lanes,
     )
 
 

@@ -1,0 +1,38 @@
+"""Deadline/SLO layer: age-ringed queues, expiry, admission control,
+load shedding, and deadline-aware policies (see deadlines/model.py for
+the full contract and the infinite-deadline bitwise anchor)."""
+from repro.deadlines.model import (
+    DEFAULT_RINGS,
+    DeadlineLedger,
+    DeadlineParams,
+    DeadlineState,
+    DeadlineView,
+    deadline_view,
+    init_deadlines,
+    make_deadlines,
+    no_deadlines,
+    stack_deadlines,
+    step_deadlines,
+)
+from repro.deadlines.policy import (
+    EDDPolicy,
+    SlackThresholdPolicy,
+    WaitAwhilePolicy,
+)
+
+__all__ = [
+    "DEFAULT_RINGS",
+    "DeadlineLedger",
+    "DeadlineParams",
+    "DeadlineState",
+    "DeadlineView",
+    "deadline_view",
+    "init_deadlines",
+    "make_deadlines",
+    "no_deadlines",
+    "stack_deadlines",
+    "step_deadlines",
+    "EDDPolicy",
+    "SlackThresholdPolicy",
+    "WaitAwhilePolicy",
+]

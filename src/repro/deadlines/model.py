@@ -1,0 +1,302 @@
+"""Deadline / SLO state for the queueing network: pure-JAX, scan-carried.
+
+Tasks in the paper's model are fire-and-forget; this module gives every
+task type a deadline (bounded tolerable waiting at the edge) and the
+simulators an overload-robustness layer, all as scan-compatible JAX so
+fleets sweep deadline scenarios across vmapped lanes:
+
+  * age rings     -- the edge queue Qe[m] is shadowed by an age-bucketed
+    decomposition `Qd[M, D]`: ring j holds the type-m tasks that have
+    had j prior service opportunities. Dispatches drain oldest-first
+    (the only order under which "deadline miss" is well-defined for a
+    FIFO edge queue); unserved tasks age one ring per slot. The ring
+    count D is carried as the SHAPE of the `rings` placeholder field,
+    so it stays static under jit/vmap while every other parameter stays
+    a sweepable array.
+  * expiry        -- a task still queued after `deadline[m]` extra slots
+    beyond its first service opportunity expires into an explicit
+    per-slot `missed` counter (never silently dropped), keeping flow
+    conservation exact in float32 integral counts:
+      cum(arrived) = Qe + Qc [+ Qt] [+ retry]
+                     + cum(processed) - cum(failed)
+                     + cum(missed) + cum(shed)
+  * admission control / load shedding -- with `shed_on`, arrivals that
+    projected service capacity cannot clear inside their deadline are
+    rejected at the door (counted in `shed`) instead of being admitted
+    to expire later: the simulator degrades gracefully under overload
+    rather than growing an unbounded queue of doomed work. Capacity is
+    an EWMA `mu[m]` of observed dispatch rates, updated only on slots
+    with queued work (idle slots carry no service-rate information --
+    decaying on them would make a quiet system shed its next burst).
+
+The infinite-deadline anchor: with `no_deadlines(...)` every deadline
+and window is +inf and shedding is off, so expiry masks are all-false
+(`expired` is an exact +0.0), the admission select returns the arrival
+vector untouched, and the deadline-threaded simulators reduce to
+bitwise identities of the pre-deadline ones (x + a - 0.0 == x + a in
+IEEE float32) -- tests/test_deadlines.py asserts this on both score
+backends, and `bench_deadline_pareto` re-asserts it before timing.
+
+All carry leaves are float32 (the analysis.audit carry discipline);
+the layer is fully deterministic -- no PRNG stream joins the scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.telemetry.profile import phase
+
+Array = jax.Array
+
+DEFAULT_RINGS = 32
+
+
+class DeadlineParams(NamedTuple):
+    """Deadline-layer parameters. A pytree of float32 arrays so fleets
+    stack it on a leading axis and vmap lanes over deadline scenarios.
+
+    `deadline[m]` counts EXTRA slots beyond the first service
+    opportunity: a type with deadline 0 must be dispatched at its first
+    opportunity or it expires; deadline d allows d+1 opportunities.
+    +inf disables expiry for the type. Finite deadlines must be
+    <= D - 1 (the top ring) -- `make_deadlines` validates this, since a
+    deeper deadline than the ring buffer would silently never expire.
+    """
+
+    deadline: Array  # [M] max extra waiting slots (+inf = none)
+    window: Array    # [M] WaitAwhile deferral window W (+inf = none)
+    shed_on: Array   # []  1.0 = admission control active
+    headroom: Array  # []  admission capacity factor (<1 sheds early)
+    alpha: Array     # []  EWMA rate for the dispatch-rate estimate
+    rings: Array     # [D] zeros; shape alone carries the ring count D
+
+    @property
+    def D(self) -> int:
+        return self.rings.shape[-1]
+
+
+class DeadlineState(NamedTuple):
+    """Scan-carried deadline state (float32 per the audit carry rules)."""
+
+    Qd: Array  # [M, D] age rings; sum over D mirrors Qe exactly
+    mu: Array  # [M] EWMA of observed dispatch rate (admission input)
+
+
+class DeadlineLedger(NamedTuple):
+    """Per-run deadline accounting attached to a result's `.deadlines`
+    field by the deadline-threaded simulators (None when the feature is
+    off). Series cover all T slots in every record mode; `Qd` follows
+    the record mode's state-trajectory length R (like Qe/Qc)."""
+
+    missed: Array    # [T] tasks expired past their deadline per slot
+    shed: Array      # [T] arrivals rejected by admission control
+    admitted: Array  # [T] arrivals admitted to the edge queue
+    Qd: Array        # [R, M, D] recorded age rings (post-step)
+
+    @property
+    def total_missed(self) -> Array:
+        return jnp.sum(self.missed)
+
+    @property
+    def total_shed(self) -> Array:
+        return jnp.sum(self.shed)
+
+
+class DeadlineView(NamedTuple):
+    """What one slot of deadline state exposes to the policy."""
+
+    deadline: Array  # [M] per-type deadline (+inf = none)
+    window: Array    # [M] per-type deferral window
+    slack: Array     # [M] slots before the oldest queued task expires
+    #                      (+inf when the queue is empty or no deadline)
+    due: Array       # [M] 1.0 where slack == 0: last service chance
+    ages: Array      # [M, D] the rings themselves
+
+
+def no_deadlines(M: int, D: int = DEFAULT_RINGS) -> DeadlineParams:
+    """Infinite deadlines/windows, shedding off: the bitwise anchor."""
+    inf = jnp.full((M,), jnp.inf, jnp.float32)
+    return DeadlineParams(
+        deadline=inf,
+        window=inf,
+        shed_on=jnp.zeros((), jnp.float32),
+        headroom=jnp.ones((), jnp.float32),
+        alpha=jnp.asarray(0.2, jnp.float32),
+        rings=jnp.zeros((D,), jnp.float32),
+    )
+
+
+def make_deadlines(M: int, D: int = DEFAULT_RINGS,
+                   **overrides) -> DeadlineParams:
+    """`no_deadlines` with per-field overrides, scalars broadcast to the
+    field's shape -- the one constructor scenario builders and tests
+    use so shapes/dtypes can't drift. Rejects finite deadlines deeper
+    than the ring buffer (they would never expire)."""
+    import numpy as np
+
+    base = no_deadlines(M, D)
+    bad = set(overrides) - (set(DeadlineParams._fields) - {"rings"})
+    if bad:
+        raise ValueError(f"unknown DeadlineParams fields: {sorted(bad)}")
+    if "deadline" in overrides:
+        d = np.asarray(overrides["deadline"], np.float32)
+        finite = d[np.isfinite(d)]
+        if finite.size and (finite.max() > D - 1 or finite.min() < 0):
+            raise ValueError(
+                f"finite deadlines must lie in [0, D-1] = [0, {D - 1}] "
+                f"(got {finite.min():g}..{finite.max():g}); raise D to "
+                "track older tasks"
+            )
+    cast = {
+        k: jnp.broadcast_to(
+            jnp.asarray(v, jnp.float32), getattr(base, k).shape
+        )
+        for k, v in overrides.items()
+    }
+    return base._replace(**cast)
+
+
+def stack_deadlines(params: list) -> DeadlineParams:
+    """Stacks per-lane DeadlineParams onto a leading fleet axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+
+
+def init_deadlines(M: int, D: int) -> DeadlineState:
+    return DeadlineState(
+        Qd=jnp.zeros((M, D), jnp.float32),
+        mu=jnp.zeros((M,), jnp.float32),
+    )
+
+
+def deadline_view(params: DeadlineParams,
+                  ds: DeadlineState) -> DeadlineView:
+    """Builds the slot's policy-facing view: the slack of each type's
+    OLDEST queued task (its deadline minus its current ring index), and
+    the last-chance flag. Empty queues and infinite deadlines both read
+    slack = +inf, so urgency math never divides by or multiplies an
+    infinity (policies clip through it)."""
+    D = params.rings.shape[-1]
+    idx = jnp.arange(D, dtype=jnp.float32)
+    occupied = ds.Qd > 0.0
+    oldest = jnp.max(
+        jnp.where(occupied, idx[None, :], -1.0), axis=-1
+    )  # [M], -1 = empty
+    slack = jnp.where(
+        oldest >= 0.0,
+        params.deadline - oldest,
+        jnp.inf,
+    )
+    due = (slack <= 0.0).astype(jnp.float32)
+    return DeadlineView(
+        deadline=params.deadline,
+        window=params.window,
+        slack=slack,
+        due=due,
+        ages=ds.Qd,
+    )
+
+
+def step_deadlines(
+    params: DeadlineParams,
+    ds: DeadlineState,
+    d_sum: Array,  # [M] tasks dispatched off the edge this slot
+    a: Array,      # [M] arrivals (pre-admission)
+) -> Tuple[DeadlineState, Array, Array, Array]:
+    """One slot of deadline dynamics. Returns
+    ``(next state, admitted [M], expired [M], shed [M])``; the caller's
+    edge-queue update becomes ``max(Qe - d_sum, 0) + admitted - expired``
+    (bitwise ``+ a`` under the `no_deadlines` anchor).
+
+    Order inside the slot, mirroring the queue dynamics (departures
+    bounded by the current queue, arrivals land after service):
+
+      1. drain `d_sum` oldest-first across the rings (suffix-sum form:
+         ring j gives up ``min(Qd[j], max(0, d - older_total))``);
+      2. expire: post-drain rings at index >= deadline[m] empty into
+         `expired` (all-false mask when deadline = +inf);
+      3. age: survivors shift one ring up; the top ring is sticky (only
+         ever populated under infinite deadlines -- `make_deadlines`
+         rejects finite deadlines that deep);
+      4. estimate: `mu` moves toward the observed dispatch rate, only
+         on slots that had queued work to move;
+      5. admit: with shedding on and a finite deadline, arrivals beyond
+         ``floor(headroom * mu * (deadline+1)) - queued`` are shed --
+         the work that projected capacity cannot clear inside its
+         window. A cold estimator (mu == 0, service never observed)
+         admits everything rather than shedding on no evidence.
+
+    Every count stays integral (drains/expiry move integral ring
+    contents; the admission cap is floored), so float32 conservation is
+    exact -- the hypothesis property in
+    tests/test_deadlines_properties.py.
+    """
+    with phase("deadline_step"):
+        return _step_deadlines(params, ds, d_sum, a)
+
+
+def _step_deadlines(params, ds, d_sum, a):
+    D = params.rings.shape[-1]
+    idx = jnp.arange(D, dtype=jnp.float32)
+
+    total = jnp.sum(ds.Qd, axis=-1)  # [M] == Qe before this step
+    d_clamped = jnp.minimum(d_sum, total)
+
+    # oldest-first drain: ring j yields only after every older ring
+    # (higher index) is empty. older[j] = sum of rings above j.
+    older = (
+        jnp.cumsum(ds.Qd[..., ::-1], axis=-1)[..., ::-1] - ds.Qd
+    )
+    taken = jnp.minimum(
+        ds.Qd, jnp.maximum(d_clamped[:, None] - older, 0.0)
+    )
+    after = ds.Qd - taken
+
+    # expiry: post-drain tasks at ring >= deadline miss their window.
+    over = idx[None, :] >= params.deadline[:, None]  # [M, D] bool
+    expired_rings = jnp.where(over, after, 0.0)
+    expired = jnp.sum(expired_rings, axis=-1)  # [M]
+    kept = after - expired_rings
+
+    # aging: shift one ring up, sticky top ring.
+    shifted = jnp.concatenate(
+        [jnp.zeros_like(kept[..., :1]), kept[..., :-1]], axis=-1
+    )
+    shifted = shifted.at[..., -1].add(kept[..., -1])
+
+    # dispatch-rate estimate: only slots with queued work carry signal.
+    mu = jnp.where(
+        total > 0.0,
+        (1.0 - params.alpha) * ds.mu + params.alpha * d_clamped,
+        ds.mu,
+    )
+
+    # admission: projected clearance inside the deadline window. Both
+    # the deadline and the select are sanitized so `inf * 0` never
+    # appears even in the unselected branch (checkify flags NaN
+    # production inside where() arms); an infinite deadline admits
+    # unconditionally through the +inf branch.
+    queued = jnp.sum(shifted, axis=-1)
+    finite = jnp.isfinite(params.deadline)
+    d_safe = jnp.where(finite, params.deadline, 0.0)
+    cap = jnp.where(
+        (mu > 0.0) & finite,
+        jnp.floor(
+            jnp.maximum(
+                params.headroom * mu * (d_safe + 1.0) - queued,
+                0.0,
+            )
+        ),
+        jnp.inf,
+    )
+    shed = jnp.where(
+        params.shed_on > 0.0,
+        jnp.maximum(a - cap, 0.0),
+        jnp.zeros_like(a),
+    )
+    admitted = a - shed
+
+    Qd = shifted.at[..., 0].add(admitted)
+    return DeadlineState(Qd=Qd, mu=mu), admitted, expired, shed

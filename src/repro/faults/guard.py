@@ -74,6 +74,7 @@ class StalenessGuardPolicy:
         forecast: Array | None = None,
         graph=None,
         Qt: Array | None = None,
+        deadline_view=None,
     ):
         inner = self.inner
         if fault_view is not None:
@@ -93,6 +94,12 @@ class StalenessGuardPolicy:
         kwargs = {}
         if forecast is not None:
             kwargs["forecast"] = forecast
+        if deadline_view is not None:
+            # Deadline urgency composes with staleness decay: the inner
+            # deadline-aware policy escalates from the already-decayed
+            # V_eff, so a stale signal AND a due task both push toward
+            # pure backpressure rather than fighting each other.
+            kwargs["deadline_view"] = deadline_view
         if graph is not None:
             return inner(
                 state, spec, Ce, Cc, arrivals, key,

@@ -85,6 +85,7 @@ class FaultSimResult(NamedTuple):
     clouds_down: Array    # [T] clouds with zero capacity this slot
     backlog: Array        # [T] Qe + Qc + retry totals (post-step)
     telemetry: object = None  # repro.telemetry.Telemetry frame, or None
+    deadlines: object = None  # repro.deadlines.DeadlineLedger, or None
 
     @property
     def final_backlog(self) -> Array:
@@ -117,6 +118,7 @@ class NetFaultSimResult(NamedTuple):
     links_down: Array     # [T] routes with zero bandwidth this slot
     backlog: Array        # [T] Qe + Qc + Qt + retry (post-step)
     telemetry: object = None  # repro.telemetry.Telemetry frame, or None
+    deadlines: object = None  # repro.deadlines.DeadlineLedger, or None
 
     @property
     def final_backlog(self) -> Array:
@@ -140,15 +142,31 @@ def simulate_faulted(
     record: str | int = "full",
     telemetry=None,
     stream_lane=None,
+    deadlines=None,
 ) -> FaultSimResult:
     """The link-free faulted run; see the module docstring for slot
     order. The fault PRNG stream is `fold_in(key, FAULT_STREAM_SALT)`,
     leaving the carbon/arrival/policy streams bit-identical to the
-    fault-free simulator's."""
+    fault-free simulator's.
+
+    `deadlines` composes the deadline layer with the fault layer: the
+    deadline clock runs on edge waiting, so outages that starve
+    dispatch show up as expiries (or, with shedding on, as admission
+    rejections) -- retry-pool tasks are already dispatched and never
+    expire. The deadline layer adds no PRNG stream, so the
+    no_deadlines run stays bitwise-identical to `deadlines=None`.
+    """
     telemetry, stream = split_telemetry(telemetry)
     pe, pc, Pe, Pc = spec.as_arrays()
     if state0 is None:
         state0 = init_state(spec.M, spec.N)
+    if deadlines is not None:
+        from repro.deadlines.model import (
+            DeadlineLedger,
+            deadline_view,
+            init_deadlines,
+            step_deadlines,
+        )
     k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
     k_fault = jax.random.fold_in(key, FAULT_STREAM_SALT)
     fs0 = init_faults(spec.M, spec.N)
@@ -159,7 +177,7 @@ def simulate_faulted(
         )
 
     def body(carry, t):
-        state, fs, fcarry, tap = carry
+        state, fs, fcarry, tap, dstate = carry
         Ce, Cc = carbon_source(t, k_carbon)
         a = arrival_source(t, k_arrive)
         k_t = jax.random.fold_in(k_policy, t)
@@ -170,9 +188,13 @@ def simulate_faulted(
         )
         spec_t = NetworkSpec(pe=pe, pc=pc, Pe=Pe, Pc=Pc * view.cloud_cap)
         obs_Ce, obs_Cc = view.obs_row[0], view.obs_row[1:]
+        pkw = {}
+        if deadlines is not None:
+            pkw["deadline_view"] = deadline_view(deadlines, dstate)
         if forecaster is None:
             act: Action = policy(
-                state, spec_t, obs_Ce, obs_Cc, a, k_t, fault_view=view
+                state, spec_t, obs_Ce, obs_Cc, a, k_t, fault_view=view,
+                **pkw,
             )
         else:
             # The forecaster sees what the telemetry feed delivers: the
@@ -181,15 +203,25 @@ def simulate_faulted(
             fcarry = forecaster.update(fcarry, view.obs_row)
             act = policy(
                 state, spec_t, obs_Ce, obs_Cc, a, k_t, fault_view=view,
-                forecast=forecaster.predict(fcarry, t),
+                forecast=forecaster.predict(fcarry, t), **pkw,
             )
         w_eff = act.w * view.cloud_on[None, :]
         act_eff = Action(d=act.d, w=w_eff)
         C_t = emissions(spec, act_eff, Ce, Cc)
         fs, failed = requeue_failed(fs, faults, w_eff, k_fail)
         d_sum = jnp.sum(act.d, axis=1)
+        if deadlines is None:
+            arr_term = a
+            missed = shed = jnp.float32(0.0)
+        else:
+            dstate, admitted, expired, shed_v = step_deadlines(
+                deadlines, dstate, d_sum, a
+            )
+            arr_term = admitted - expired
+            missed = jnp.sum(expired)
+            shed = jnp.sum(shed_v)
         nxt = NetworkState(
-            Qe=jnp.maximum(state.Qe - d_sum, 0.0) + a,
+            Qe=jnp.maximum(state.Qe - d_sum, 0.0) + arr_term,
             Qc=jnp.maximum(state.Qc - w_eff, 0.0)
             + act.d + view.released,
         )
@@ -211,8 +243,10 @@ def simulate_faulted(
             jnp.sum(1.0 - view.cloud_on),
             backlog,
         )
+        if deadlines is not None:
+            out = out + (missed, shed, jnp.sum(admitted))
         if telemetry is None:
-            return (nxt, fs, fcarry, tap), out
+            return (nxt, fs, fcarry, tap, dstate), out
         probe = TelemetryProbe(
             emissions=C_t,
             arrived=jnp.sum(a),
@@ -225,18 +259,29 @@ def simulate_faulted(
             clouds_down=jnp.sum(1.0 - view.cloud_on),
             retry_depth=jnp.sum(fs.retry),
             transfer_occupancy=jnp.float32(0.0),
+            missed=missed,
+            shed=shed,
         )
         tap, tseries = step_taps(telemetry, tap, probe)
-        return (nxt, fs, fcarry, tap), (out, tseries)
+        return (nxt, fs, fcarry, tap, dstate), (out, tseries)
 
     carry0 = (
         state0, fs0,
         fcarry0 if forecaster is not None else (),
         init_taps() if telemetry is not None else (),
+        init_deadlines(spec.M, deadlines.rings.shape[-1])
+        if deadlines is not None else (),
     )
+    if deadlines is None:
+        state_of = lambda carry: (  # noqa: E731
+            carry[0].Qe, carry[0].Qc, carry[1].retry
+        )
+    else:
+        state_of = lambda carry: (  # noqa: E731
+            carry[0].Qe, carry[0].Qc, carry[1].retry, carry[4].Qd
+        )
     scalars, states = _record_scan(
-        body,
-        lambda carry: (carry[0].Qe, carry[0].Qc, carry[1].retry),
+        body, state_of,
         carry0, T, record, stream=stream, lane=stream_lane,
     )
     if telemetry is None:
@@ -244,9 +289,16 @@ def simulate_faulted(
     else:
         scalars, tseries = scalars
         tel = finalize_taps(telemetry, tseries)
-    (C, arr, disp, proc, ee, ec,
-     fail, req, waste, stale, down, backlog) = scalars
-    Qe, Qc, retry = states
+    if deadlines is None:
+        (C, arr, disp, proc, ee, ec,
+         fail, req, waste, stale, down, backlog) = scalars
+        (Qe, Qc, retry), led = states, None
+    else:
+        (C, arr, disp, proc, ee, ec, fail, req, waste, stale, down,
+         backlog, missed, shed, adm) = scalars
+        Qe, Qc, retry, Qd = states
+        led = DeadlineLedger(missed=missed, shed=shed, admitted=adm,
+                             Qd=Qd)
     return FaultSimResult(
         emissions=C, cum_emissions=jnp.cumsum(C),
         Qe=Qe, Qc=Qc, retry=retry,
@@ -254,7 +306,7 @@ def simulate_faulted(
         energy_edge=ee, energy_cloud=ec,
         failed=fail, requeued=req, wasted=waste,
         stale=stale, clouds_down=down, backlog=backlog,
-        telemetry=tel,
+        telemetry=tel, deadlines=led,
     )
 
 
@@ -273,10 +325,20 @@ def simulate_network_faulted(
     record: str | int = "full",
     telemetry=None,
     stream_lane=None,
+    deadlines=None,
 ) -> NetFaultSimResult:
     """The WAN faulted run: link flaps scale each route's bandwidth in
-    `step_links`; everything else mirrors `simulate_faulted`."""
+    `step_links`; everything else mirrors `simulate_faulted`
+    (including the `deadlines=` layer, whose clock here runs on edge
+    waiting before link injection)."""
     telemetry, stream = split_telemetry(telemetry)
+    if deadlines is not None:
+        from repro.deadlines.model import (
+            DeadlineLedger,
+            deadline_view,
+            init_deadlines,
+            step_deadlines,
+        )
     from repro.network.transfer import (
         NetAction,
         init_links,
@@ -306,7 +368,7 @@ def simulate_network_faulted(
         )
 
     def body(carry, t):
-        state, ls, fs, fcarry, tap = carry
+        state, ls, fs, fcarry, tap, dstate = carry
         Ce, Cc = carbon_source(t, k_carbon)
         a = arrival_source(t, k_arrive)
         k_t = jax.random.fold_in(k_policy, t)
@@ -317,17 +379,20 @@ def simulate_network_faulted(
         )
         spec_t = NetworkSpec(pe=pe, pc=pc, Pe=Pe, Pc=Pc * view.cloud_cap)
         obs_Ce, obs_Cc = view.obs_row[0], view.obs_row[1:]
+        pkw = {}
+        if deadlines is not None:
+            pkw["deadline_view"] = deadline_view(deadlines, dstate)
         if forecaster is None:
             act: NetAction = policy(
                 state, spec_t, obs_Ce, obs_Cc, a, k_t,
-                graph=graph, Qt=ls.Qt, fault_view=view,
+                graph=graph, Qt=ls.Qt, fault_view=view, **pkw,
             )
         else:
             fcarry = forecaster.update(fcarry, view.obs_row)
             act = policy(
                 state, spec_t, obs_Ce, obs_Cc, a, k_t,
                 graph=graph, Qt=ls.Qt, fault_view=view,
-                forecast=forecaster.predict(fcarry, t),
+                forecast=forecaster.predict(fcarry, t), **pkw,
             )
         w_eff = act.w * view.cloud_on[None, :]
         act_eff = NetAction(dt=act.dt, w=w_eff)
@@ -338,8 +403,18 @@ def simulate_network_faulted(
         land = land_in_clouds(delivered, graph, spec.N)
         fs, failed = requeue_failed(fs, faults, w_eff, k_fail)
         d_sum = jnp.sum(act.dt, axis=1)
+        if deadlines is None:
+            arr_term = a
+            missed = shed = jnp.float32(0.0)
+        else:
+            dstate, admitted, expired, shed_v = step_deadlines(
+                deadlines, dstate, d_sum, a
+            )
+            arr_term = admitted - expired
+            missed = jnp.sum(expired)
+            shed = jnp.sum(shed_v)
         nxt = NetworkState(
-            Qe=jnp.maximum(state.Qe - d_sum, 0.0) + a,
+            Qe=jnp.maximum(state.Qe - d_sum, 0.0) + arr_term,
             Qc=jnp.maximum(state.Qc - w_eff, 0.0)
             + land + view.released,
         )
@@ -365,8 +440,10 @@ def simulate_network_faulted(
             jnp.sum(1.0 - view.link_on),
             backlog,
         )
+        if deadlines is not None:
+            out = out + (missed, shed, jnp.sum(admitted))
         if telemetry is None:
-            return (nxt, ls_next, fs, fcarry, tap), out
+            return (nxt, ls_next, fs, fcarry, tap, dstate), out
         probe = TelemetryProbe(
             emissions=C_t,
             arrived=jnp.sum(a),
@@ -379,20 +456,30 @@ def simulate_network_faulted(
             clouds_down=jnp.sum(1.0 - view.cloud_on),
             retry_depth=jnp.sum(fs.retry),
             transfer_occupancy=jnp.sum(ls_next.Qt),
+            missed=missed,
+            shed=shed,
         )
         tap, tseries = step_taps(telemetry, tap, probe)
-        return (nxt, ls_next, fs, fcarry, tap), (out, tseries)
+        return (nxt, ls_next, fs, fcarry, tap, dstate), (out, tseries)
 
     carry0 = (
         state0, ls0, fs0,
         fcarry0 if forecaster is not None else (),
         init_taps() if telemetry is not None else (),
+        init_deadlines(spec.M, deadlines.rings.shape[-1])
+        if deadlines is not None else (),
     )
-    scalars, states = _record_scan(
-        body,
-        lambda carry: (
+    if deadlines is None:
+        state_of = lambda carry: (  # noqa: E731
             carry[0].Qe, carry[0].Qc, carry[1].Qt, carry[2].retry
-        ),
+        )
+    else:
+        state_of = lambda carry: (  # noqa: E731
+            carry[0].Qe, carry[0].Qc, carry[1].Qt, carry[2].retry,
+            carry[5].Qd,
+        )
+    scalars, states = _record_scan(
+        body, state_of,
         carry0, T, record, stream=stream, lane=stream_lane,
     )
     if telemetry is None:
@@ -400,9 +487,16 @@ def simulate_network_faulted(
     else:
         scalars, tseries = scalars
         tel = finalize_taps(telemetry, tseries)
-    (C, arr, disp, deliv, proc, ee, et, ec,
-     fail, req, waste, stale, cdown, ldown, backlog) = scalars
-    Qe, Qc, Qt, retry = states
+    if deadlines is None:
+        (C, arr, disp, deliv, proc, ee, et, ec,
+         fail, req, waste, stale, cdown, ldown, backlog) = scalars
+        (Qe, Qc, Qt, retry), led = states, None
+    else:
+        (C, arr, disp, deliv, proc, ee, et, ec, fail, req, waste,
+         stale, cdown, ldown, backlog, missed, shed, adm) = scalars
+        Qe, Qc, Qt, retry, Qd = states
+        led = DeadlineLedger(missed=missed, shed=shed, admitted=adm,
+                             Qd=Qd)
     return NetFaultSimResult(
         emissions=C, cum_emissions=jnp.cumsum(C),
         Qe=Qe, Qc=Qc, Qt=Qt, retry=retry,
@@ -411,5 +505,5 @@ def simulate_network_faulted(
         failed=fail, requeued=req, wasted=waste,
         stale=stale, clouds_down=cdown, links_down=ldown,
         backlog=backlog,
-        telemetry=tel,
+        telemetry=tel, deadlines=led,
     )

@@ -111,8 +111,9 @@ class NetworkAwareDPPPolicy(LookaheadDPPPolicy):
         Qt: Array,
         forecast: Array | None = None,
         fault_view=None,
+        deadline_view=None,
     ) -> NetAction:
-        del arrivals, key, fault_view
+        del arrivals, key, fault_view, deadline_view
         Ce_eff, Cc_eff = self.effective_intensities(Ce, Cc, forecast)
         pe, pc, Pe, Pc = spec.as_arrays()
         V = jnp.asarray(self.V, jnp.float32)
@@ -153,13 +154,14 @@ class StaticRoutePolicy:
         Qt: Array,
         forecast: Array | None = None,
         fault_view=None,
+        deadline_view=None,
     ) -> NetAction:
         del Qt, fault_view
-        if forecast is None:
-            act = self.inner(state, spec, Ce, Cc, arrivals, key)
-        else:
-            act = self.inner(
-                state, spec, Ce, Cc, arrivals, key, forecast=forecast
-            )
+        kwargs = {}
+        if forecast is not None:
+            kwargs["forecast"] = forecast
+        if deadline_view is not None:
+            kwargs["deadline_view"] = deadline_view
+        act = self.inner(state, spec, Ce, Cc, arrivals, key, **kwargs)
         onehot = jax.nn.one_hot(graph.primary, graph.L, dtype=act.d.dtype)
         return NetAction(dt=act.d @ onehot, w=act.w)

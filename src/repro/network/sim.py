@@ -61,6 +61,7 @@ class NetSimResult(NamedTuple):
     energy_transfer: Array  # [T] WAN transfer energy
     energy_cloud: Array     # [T, N] cloud compute energy
     telemetry: object = None  # repro.telemetry.Telemetry frame, or None
+    deadlines: object = None  # repro.deadlines.DeadlineLedger, or None
 
     # R depends on the `record` mode exactly as in SimResult: T for
     # "full", 1 for "summary", T//k for stride k.
@@ -87,6 +88,7 @@ def simulate_network(
     faults=None,
     telemetry=None,
     stream_lane=None,
+    deadlines=None,
 ) -> NetSimResult:
     """Runs the network + WAN for T slots under a route-aware policy.
 
@@ -109,6 +111,10 @@ def simulate_network(
     tracks the in-flight Qt total and `dispatched_cloud` counts
     LANDINGS per cloud, not link injections); `telemetry=None` runs are
     bit-identical to a build without the telemetry layer.
+
+    `deadlines` behaves as in `core.simulator.simulate`: the deadline
+    clock runs on edge waiting (time-to-dispatch onto a link); once a
+    task is in flight or queued at a cloud it no longer expires.
     """
     if faults is not None:
         from repro.faults.sim import simulate_network_faulted
@@ -118,11 +124,19 @@ def simulate_network(
             T, key, state0=state0, forecaster=forecaster,
             error_params=error_params, record=record,
             telemetry=telemetry, stream_lane=stream_lane,
+            deadlines=deadlines,
         )
     telemetry, stream = split_telemetry(telemetry)
     pe, pc, _, _ = spec.as_arrays()
     if state0 is None:
         state0 = init_state(spec.M, spec.N)
+    if deadlines is not None:
+        from repro.deadlines.model import (
+            DeadlineLedger,
+            deadline_view,
+            init_deadlines,
+            step_deadlines,
+        )
     ls0 = init_links(spec.M, graph.L)
     k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
 
@@ -132,13 +146,17 @@ def simulate_network(
         )
 
     def body(carry, t):
-        state, ls, fcarry, tap = carry
+        state, ls, fcarry, tap, dstate = carry
         Ce, Cc = carbon_source(t, k_carbon)
         a = arrival_source(t, k_arrive)
         k_t = jax.random.fold_in(k_policy, t)
+        pkw = {}
+        if deadlines is not None:
+            pkw["deadline_view"] = deadline_view(deadlines, dstate)
         if forecaster is None:
             act: NetAction = policy(
-                state, spec, Ce, Cc, a, k_t, graph=graph, Qt=ls.Qt
+                state, spec, Ce, Cc, a, k_t, graph=graph, Qt=ls.Qt,
+                **pkw,
             )
         else:
             fcarry = forecaster.update(
@@ -146,14 +164,24 @@ def simulate_network(
             )
             act = policy(
                 state, spec, Ce, Cc, a, k_t, graph=graph, Qt=ls.Qt,
-                forecast=forecaster.predict(fcarry, t),
+                forecast=forecaster.predict(fcarry, t), **pkw,
             )
         C_t = network_emissions(spec, graph, act, Ce, Cc)
         ls_next, delivered = step_links(ls, graph, act.dt)
         land = land_in_clouds(delivered, graph, spec.N)
         d_sum = jnp.sum(act.dt, axis=1)
+        if deadlines is None:
+            arr_term = a
+            missed = shed = jnp.float32(0.0)
+        else:
+            dstate, admitted, expired, shed_v = step_deadlines(
+                deadlines, dstate, d_sum, a
+            )
+            arr_term = admitted - expired
+            missed = jnp.sum(expired)
+            shed = jnp.sum(shed_v)
         nxt = NetworkState(
-            Qe=jnp.maximum(state.Qe - d_sum, 0.0) + a,
+            Qe=jnp.maximum(state.Qe - d_sum, 0.0) + arr_term,
             Qc=jnp.maximum(state.Qc - act.w, 0.0) + land,
         )
         out = (
@@ -165,8 +193,10 @@ def simulate_network(
             jnp.sum(transfer_energy(graph, act.dt)),
             jnp.sum(act.w * pc, axis=0),
         )
+        if deadlines is not None:
+            out = out + (missed, shed, jnp.sum(admitted))
         if telemetry is None:
-            return (nxt, ls_next, fcarry, tap), out
+            return (nxt, ls_next, fcarry, tap, dstate), out
         probe = TelemetryProbe(
             emissions=C_t,
             arrived=jnp.sum(a),
@@ -180,24 +210,44 @@ def simulate_network(
             clouds_down=jnp.float32(0.0),
             retry_depth=jnp.float32(0.0),
             transfer_occupancy=jnp.sum(ls_next.Qt),
+            missed=missed,
+            shed=shed,
         )
         tap, tseries = step_taps(telemetry, tap, probe)
-        return (nxt, ls_next, fcarry, tap), (out, tseries)
+        return (nxt, ls_next, fcarry, tap, dstate), (out, tseries)
 
     carry0 = (
         state0, ls0,
         fcarry0 if forecaster is not None else (),
         init_taps() if telemetry is not None else (),
+        init_deadlines(spec.M, deadlines.rings.shape[-1])
+        if deadlines is not None else (),
     )
-    scalars, (Qe, Qc, Qt) = _record_scan(
-        body, lambda carry: (carry[0].Qe, carry[0].Qc, carry[1].Qt),
+    if deadlines is None:
+        state_of = lambda carry: (  # noqa: E731
+            carry[0].Qe, carry[0].Qc, carry[1].Qt
+        )
+    else:
+        state_of = lambda carry: (  # noqa: E731
+            carry[0].Qe, carry[0].Qc, carry[1].Qt, carry[4].Qd
+        )
+    scalars, states = _record_scan(
+        body, state_of,
         carry0, T, record, stream=stream, lane=stream_lane,
     )
     if telemetry is None:
-        (C, disp, deliv, proc, ee, et, ec), tel = scalars, None
+        scal, tel = scalars, None
     else:
-        (C, disp, deliv, proc, ee, et, ec), tseries = scalars
+        scal, tseries = scalars
         tel = finalize_taps(telemetry, tseries)
+    if deadlines is None:
+        (C, disp, deliv, proc, ee, et, ec) = scal
+        (Qe, Qc, Qt), led = states, None
+    else:
+        (C, disp, deliv, proc, ee, et, ec, missed, shed, adm) = scal
+        Qe, Qc, Qt, Qd = states
+        led = DeadlineLedger(missed=missed, shed=shed, admitted=adm,
+                             Qd=Qd)
     return NetSimResult(
         emissions=C,
         cum_emissions=jnp.cumsum(C),
@@ -211,4 +261,5 @@ def simulate_network(
         energy_transfer=et,
         energy_cloud=ec,
         telemetry=tel,
+        deadlines=led,
     )

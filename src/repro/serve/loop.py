@@ -80,6 +80,13 @@ class ServeReport(NamedTuple):
     latency_us: np.ndarray  # [slots] every decision, warmup included
     backlog: np.ndarray     # [slots] post-step Qe+Qc total
     queue_age: np.ndarray   # [slots] oldest unserved task's age
+    # deadline-aware serving (zero / 0.0 when `deadlines` is off):
+    missed_total: float = 0.0  # tasks expired past their deadline
+    shed_total: float = 0.0    # arrivals rejected by admission control
+    age_p50: float = 0.0       # queue-age percentiles over all slots --
+    age_p95: float = 0.0       #   read against the configured deadline
+    age_p99: float = 0.0       #   (the queue-age-vs-deadline export)
+    age_over_deadline_frac: float = 0.0  # slots with age > min deadline
 
 
 def latency_percentiles(lat_us) -> tuple:
@@ -93,7 +100,7 @@ def latency_percentiles(lat_us) -> tuple:
 
 
 def make_serve_step(policy, spec: NetworkSpec, carbon_source,
-                    arrival_source, key) -> Callable:
+                    arrival_source, key, deadlines=None) -> Callable:
     """Compiles the one serving step: `(state, t) -> (state', metrics)`
     with the state buffers DONATED (the loop never reuses the old
     state, so XLA may update queues in place).
@@ -103,24 +110,53 @@ def make_serve_step(policy, spec: NetworkSpec, carbon_source,
     it over t = 0..T-1 reproduces the batch trajectory bitwise.
     metrics = (emissions, arrived, dispatched, processed, backlog),
     all f32 scalars.
+
+    With `deadlines` (a DeadlineParams) the carried state becomes the
+    pair `(NetworkState, DeadlineState)`, the policy receives the
+    slot's `deadline_view`, and metrics grows `(missed, shed)` -- the
+    same deadline slot dynamics as the batch simulator, so the
+    deadline-aware served trajectory is bitwise the batch one too.
     """
     k_carbon, k_arrive, k_policy = jax.random.split(key, 3)
+    if deadlines is not None:
+        from repro.deadlines.model import deadline_view, step_deadlines
 
     def step(state, t):
+        if deadlines is not None:
+            state, dstate = state
         Ce, Cc = carbon_source(t, k_carbon)
         a = arrival_source(t, k_arrive)
         k_t = jax.random.fold_in(k_policy, t)
-        act: Action = policy(state, spec, Ce, Cc, a, k_t)
+        if deadlines is None:
+            act: Action = policy(state, spec, Ce, Cc, a, k_t)
+        else:
+            act = policy(state, spec, Ce, Cc, a, k_t,
+                         deadline_view=deadline_view(deadlines, dstate))
         C_t = emissions(spec, act, Ce, Cc)
-        nxt = queue_step(state, act, a)
         metrics = (
             C_t,
             jnp.sum(a),
             jnp.sum(act.d),
             jnp.sum(act.w),
-            jnp.sum(nxt.Qe) + jnp.sum(nxt.Qc),
         )
-        return nxt, metrics
+        if deadlines is None:
+            nxt = queue_step(state, act, a)
+            return nxt, metrics + (
+                jnp.sum(nxt.Qe) + jnp.sum(nxt.Qc),
+            )
+        d_sum = jnp.sum(act.d, axis=1)
+        dstate, admitted, expired, shed = step_deadlines(
+            deadlines, dstate, d_sum, a
+        )
+        nxt = state._replace(
+            Qe=jnp.maximum(state.Qe - d_sum, 0.0) + admitted - expired,
+            Qc=jnp.maximum(state.Qc - act.w, 0.0) + act.d,
+        )
+        return (nxt, dstate), metrics + (
+            jnp.sum(nxt.Qe) + jnp.sum(nxt.Qc),
+            jnp.sum(expired),
+            jnp.sum(shed),
+        )
 
     return jax.jit(step, donate_argnums=0)
 
@@ -173,18 +209,21 @@ class ServeExporter:
         self._slots = 0
         self._lat: list = []       # non-warmup latencies so far
         self._totals = {"arrived": 0.0, "dispatched": 0.0,
-                        "processed": 0.0, "emissions": 0.0}
+                        "processed": 0.0, "emissions": 0.0,
+                        "missed": 0.0, "shed": 0.0}
         self._last = {"backlog": 0.0, "queue_age": 0}
 
     def record(self, t: int, latency_us: float, arrived: float,
                dispatched: float, processed: float, backlog: float,
-               queue_age: int, emissions_t: float) -> None:
+               queue_age: int, emissions_t: float,
+               missed: float = 0.0, shed: float = 0.0) -> None:
         self._pending.append(json.dumps({
             "event": "slot", "kind": "serve", "t": t,
             "latency_us": latency_us, "arrived": arrived,
             "dispatched": dispatched, "processed": processed,
             "backlog": backlog, "queue_age": queue_age,
             "emissions": emissions_t, "warmup": t < self.warmup,
+            "missed": missed, "shed": shed,
         }))
         self._slots += 1
         if t >= self.warmup:
@@ -193,6 +232,8 @@ class ServeExporter:
         self._totals["dispatched"] += dispatched
         self._totals["processed"] += processed
         self._totals["emissions"] += emissions_t
+        self._totals["missed"] += missed
+        self._totals["shed"] += shed
         self._last = {"backlog": backlog, "queue_age": queue_age}
         if len(self._pending) >= self.flush_every:
             self.flush()
@@ -217,8 +258,11 @@ class ServeExporter:
              [("", self._slots)])
         for k, v in self._totals.items():
             unit = "gCO2" if k == "emissions" else "tasks"
-            emit(f"repro_serve_{k}_total", "counter",
-                 f"running {k} over served slots ({unit})", [("", v)])
+            help_ = {
+                "missed": "tasks expired past their deadline (tasks)",
+                "shed": "arrivals rejected by admission control (tasks)",
+            }.get(k, f"running {k} over served slots ({unit})")
+            emit(f"repro_serve_{k}_total", "counter", help_, [("", v)])
         emit("repro_serve_backlog", "gauge",
              "post-step backlog at the newest slot (tasks)",
              [("", self._last["backlog"])])
@@ -259,6 +303,11 @@ class ServeExporter:
             "p50_us": report.p50_us, "p95_us": report.p95_us,
             "p99_us": report.p99_us, "mean_us": report.mean_us,
             "max_queue_age": report.max_queue_age,
+            "missed_total": report.missed_total,
+            "shed_total": report.shed_total,
+            "age_p50": report.age_p50, "age_p95": report.age_p95,
+            "age_p99": report.age_p99,
+            "age_over_deadline_frac": report.age_over_deadline_frac,
         }
         with self.paths["jsonl"].open("a") as fh:
             fh.write(json.dumps(summary) + "\n")
@@ -269,13 +318,18 @@ class ServeExporter:
 def serve_loop(policy, spec: NetworkSpec, carbon_source, arrival_source,
                T: int, key, *, warmup: int = 2, clock=None,
                outdir=None, stem: str = "serve",
-               flush_every: int = 16) -> ServeReport:
+               flush_every: int = 16, deadlines=None) -> ServeReport:
     """Drives `make_serve_step` for T slots from the host, timing every
     decision. `clock` defaults to `time.perf_counter`; inject a fake
     (called 2T + 2 times: loop start, before/after each step, loop end)
     for deterministic latency tests. `outdir` turns on live export via
     ServeExporter. Percentiles cover slots[warmup:] (slot 0 pays XLA
     compilation); `warmup` is clamped to T-1 so tiny runs still report.
+
+    `deadlines` (a DeadlineParams) serves deadline-aware: per-slot
+    expiries/sheds accumulate into the report and the live export, and
+    the queue-age percentiles are read against the tightest configured
+    deadline (`age_over_deadline_frac`).
     """
     if clock is None:
         clock = time.perf_counter
@@ -285,14 +339,18 @@ def serve_loop(policy, spec: NetworkSpec, carbon_source, arrival_source,
         exporter = ServeExporter(outdir, stem=stem,
                                  flush_every=flush_every, warmup=warmup)
     step = make_serve_step(policy, spec, carbon_source, arrival_source,
-                           key)
+                           key, deadlines=deadlines)
     state = init_state(spec.M, spec.N)
+    if deadlines is not None:
+        from repro.deadlines.model import init_deadlines
+
+        state = (state, init_deadlines(spec.M, deadlines.rings.shape[-1]))
     ages = _AgeFifo()
     lat = np.zeros(T)
     backlog = np.zeros(T)
     queue_age = np.zeros(T, np.int64)
     totals = {"arrived": 0.0, "dispatched": 0.0, "processed": 0.0,
-              "emissions": 0.0}
+              "emissions": 0.0, "missed": 0.0, "shed": 0.0}
 
     t_start = clock()
     for t in range(T):
@@ -301,21 +359,42 @@ def serve_loop(policy, spec: NetworkSpec, carbon_source, arrival_source,
         jax.block_until_ready(metrics)
         c1 = clock()
         lat[t] = (c1 - c0) * 1e6
-        em_t, arrived, dispatched, processed, bl = (
-            float(x) for x in metrics
-        )
+        missed_t = shed_t = 0.0
+        if deadlines is None:
+            em_t, arrived, dispatched, processed, bl = (
+                float(x) for x in metrics
+            )
+        else:
+            (em_t, arrived, dispatched, processed, bl,
+             missed_t, shed_t) = (float(x) for x in metrics)
         totals["arrived"] += arrived
         totals["dispatched"] += dispatched
         totals["processed"] += processed
         totals["emissions"] += em_t
+        totals["missed"] += missed_t
+        totals["shed"] += shed_t
         backlog[t] = bl
-        queue_age[t] = ages.update(t, arrived, processed)
+        # shed arrivals never enter the queue; missed tasks leave it by
+        # expiry -- both must flow through the age FIFO or the gauge
+        # reads phantom tasks (no-ops when the deadline layer is off)
+        queue_age[t] = ages.update(t, arrived - shed_t,
+                                   processed + missed_t)
         if exporter is not None:
             exporter.record(t, lat[t], arrived, dispatched, processed,
-                            bl, int(queue_age[t]), em_t)
+                            bl, int(queue_age[t]), em_t,
+                            missed=missed_t, shed=shed_t)
     wall_s = clock() - t_start
 
     p50, p95, p99, mean = latency_percentiles(lat[warmup:])
+    age_p50, age_p95, age_p99 = (
+        float(x) for x in np.percentile(queue_age, [50.0, 95.0, 99.0])
+    )
+    over_frac = 0.0
+    if deadlines is not None:
+        d = np.asarray(deadlines.deadline, np.float64)
+        finite = d[np.isfinite(d)]
+        if finite.size:
+            over_frac = float(np.mean(queue_age > finite.min()))
     report = ServeReport(
         slots=T,
         warmup=warmup,
@@ -330,6 +409,10 @@ def serve_loop(policy, spec: NetworkSpec, carbon_source, arrival_source,
         latency_us=lat,
         backlog=backlog,
         queue_age=queue_age,
+        missed_total=totals["missed"],
+        shed_total=totals["shed"],
+        age_p50=age_p50, age_p95=age_p95, age_p99=age_p99,
+        age_over_deadline_frac=over_frac,
     )
     if exporter is not None:
         exporter.close(report)
@@ -369,11 +452,30 @@ def main(argv=None) -> ServeReport:
     ap.add_argument("--flush-every", type=int, default=8)
     ap.add_argument("--outdir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="serve deadline-aware: max extra waiting slots "
+                         "per task before it expires (default: off)")
+    ap.add_argument("--shed", action="store_true",
+                    help="with --deadline: admission control sheds "
+                         "arrivals projected capacity cannot clear")
+    ap.add_argument("--headroom", type=float, default=0.9,
+                    help="admission capacity factor for --shed")
     args = ap.parse_args(argv)
+
+    deadlines = None
+    policy = CarbonIntensityPolicy(V=0.05)
+    if args.deadline is not None:
+        from repro.deadlines import SlackThresholdPolicy, make_deadlines
+
+        deadlines = make_deadlines(
+            args.types, deadline=args.deadline,
+            shed_on=1.0 if args.shed else 0.0, headroom=args.headroom,
+        )
+        policy = SlackThresholdPolicy(V=0.05)
 
     spec = _demo_spec(args.types, args.clouds, args.seed)
     report = serve_loop(
-        CarbonIntensityPolicy(V=0.05),
+        policy,
         spec,
         UKRegionalTraceSource(N=args.clouds),
         UniformArrivals(M=args.types, amax=args.amax),
@@ -382,6 +484,7 @@ def main(argv=None) -> ServeReport:
         warmup=args.warmup,
         outdir=args.outdir,
         flush_every=args.flush_every,
+        deadlines=deadlines,
     )
     print(f"served {report.slots} slots "
           f"(M={args.types}, N={args.clouds}, amax={args.amax})")
@@ -393,6 +496,13 @@ def main(argv=None) -> ServeReport:
           f"(warmup={report.warmup} excluded)")
     print(f"max queue age {report.max_queue_age} slots, "
           f"emissions {report.total_emissions:.3g} gCO2-eq")
+    if deadlines is not None:
+        print(f"queue age p50/p95/p99 {report.age_p50:.0f}/"
+              f"{report.age_p95:.0f}/{report.age_p99:.0f} slots vs "
+              f"deadline {args.deadline:g} "
+              f"(over-deadline {report.age_over_deadline_frac:.1%}); "
+              f"missed {report.missed_total:.0f}, "
+              f"shed {report.shed_total:.0f}")
     if report.tasks_arrived < 1e4:
         raise SystemExit(
             f"serving smoke must cover >= 10^4 tasks, got "

@@ -30,8 +30,15 @@ MONITORS = (
     "all_clouds_down",
     # the flow-conservation residual
     #   cum(arrived) - (backlog + cum(processed) - cum(failed))
+    #                - cum(missed) - cum(shed)
     # left the +/- drift_tol band: the ledger is leaking tasks.
     "conservation_drift",
+    # tasks expired past their deadline this slot (beyond miss_tol):
+    # the scheduler is converting deferral into SLO violations.
+    "deadline_miss",
+    # admission control rejected more than shed_frac of this slot's
+    # arrivals: the system is in sustained overload.
+    "shed_rate",
 )
 K = len(MONITORS)
 
@@ -50,5 +57,7 @@ def monitor_conditions(cfg, probe, growth_run: Array,
         probe.stale > cfg.stale_budget,
         probe.clouds_down >= jnp.float32(n_clouds),
         jnp.abs(residual) > cfg.drift_tol,
+        probe.missed > cfg.miss_tol,
+        probe.shed > cfg.shed_frac * probe.arrived,
     )
     return jnp.stack([c.astype(jnp.int32) for c in conds])

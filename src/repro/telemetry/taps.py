@@ -42,12 +42,16 @@ class TelemetryConfig:
     growth_sustain  consecutive growing slots before the alert trips
     stale_budget    carbon-signal age (slots) the run tolerates
     drift_tol       |conservation residual| tolerance (tasks)
+    miss_tol        deadline misses per slot the SLO tolerates
+    shed_frac       shed fraction of arrivals the SLO tolerates
     """
 
     growth_thresh: float = 0.0
     growth_sustain: int = 8
     stale_budget: int = 4
     drift_tol: float = 0.5
+    miss_tol: float = 0.0
+    shed_frac: float = 0.0
 
 
 class TelemetryProbe(NamedTuple):
@@ -66,6 +70,10 @@ class TelemetryProbe(NamedTuple):
     clouds_down: Array         # clouds at zero capacity this slot
     retry_depth: Array         # retry-pool total (post-step)
     transfer_occupancy: Array  # in-flight transfer queue total
+    # Deadline-layer fields default to exact zeros so the pre-deadline
+    # probe construction sites (and deadline-off runs) stay untouched.
+    missed: Array = jnp.float32(0.0)  # tasks expired past deadline
+    shed: Array = jnp.float32(0.0)    # arrivals rejected by admission
 
 
 class TapState(NamedTuple):
@@ -76,6 +84,8 @@ class TapState(NamedTuple):
     cum_arrived: Array    # f32 running totals for the
     cum_processed: Array  # f32   conservation residual
     cum_failed: Array     # f32
+    cum_missed: Array     # f32
+    cum_shed: Array       # f32
 
 
 class TapSeries(NamedTuple):
@@ -93,6 +103,8 @@ class TapSeries(NamedTuple):
     clouds_down: Array            # f32
     retry_depth: Array            # f32
     transfer_occupancy: Array     # f32
+    missed: Array                 # f32 deadline expiries this slot
+    shed: Array                   # f32 arrivals shed this slot
     conservation_residual: Array  # f32
     alert_active: Array           # [K] int32, axis = monitors.MONITORS
 
@@ -116,6 +128,8 @@ class Telemetry(NamedTuple):
     clouds_down: Array
     retry_depth: Array
     transfer_occupancy: Array
+    missed: Array
+    shed: Array
     conservation_residual: Array
     alert_active: Array           # [T, K] int32
     # run gauges / counters (f32 scalars)
@@ -125,6 +139,8 @@ class Telemetry(NamedTuple):
     total_processed: Array
     total_failed: Array
     total_wasted: Array
+    total_missed: Array
+    total_shed: Array
     # structured alert records ([K] int32, axis = monitors.MONITORS)
     alert_tripped: Array
     alert_first_slot: Array       # first firing slot, -1 = never
@@ -138,6 +154,8 @@ def init_taps() -> TapState:
         cum_arrived=jnp.float32(0.0),
         cum_processed=jnp.float32(0.0),
         cum_failed=jnp.float32(0.0),
+        cum_missed=jnp.float32(0.0),
+        cum_shed=jnp.float32(0.0),
     )
 
 
@@ -153,9 +171,14 @@ def step_taps(cfg: TelemetryConfig, tap: TapState,
     cum_arrived = tap.cum_arrived + probe.arrived
     cum_processed = tap.cum_processed + probe.processed
     cum_failed = tap.cum_failed + probe.failed
+    cum_missed = tap.cum_missed + probe.missed
+    cum_shed = tap.cum_shed + probe.shed
+    # The trailing subtractions are exact -0.0 no-ops in deadline-off
+    # runs (the cums stay +0.0), preserving the pre-deadline residual
+    # bit-for-bit.
     residual = cum_arrived - (
         probe.backlog + cum_processed - cum_failed
-    )
+    ) - cum_missed - cum_shed
     active = monitor_conditions(cfg, probe, growth_run, residual)
     nxt = TapState(
         prev_backlog=probe.backlog,
@@ -163,6 +186,8 @@ def step_taps(cfg: TelemetryConfig, tap: TapState,
         cum_arrived=cum_arrived,
         cum_processed=cum_processed,
         cum_failed=cum_failed,
+        cum_missed=cum_missed,
+        cum_shed=cum_shed,
     )
     series = TapSeries(
         emission_rate=probe.emissions,
@@ -177,6 +202,8 @@ def step_taps(cfg: TelemetryConfig, tap: TapState,
         clouds_down=probe.clouds_down,
         retry_depth=probe.retry_depth,
         transfer_occupancy=probe.transfer_occupancy,
+        missed=probe.missed,
+        shed=probe.shed,
         conservation_residual=residual,
         alert_active=active,
     )
@@ -213,6 +240,8 @@ def finalize_taps(cfg: TelemetryConfig, series: TapSeries) -> Telemetry:
         clouds_down=series.clouds_down,
         retry_depth=series.retry_depth,
         transfer_occupancy=series.transfer_occupancy,
+        missed=series.missed,
+        shed=series.shed,
         conservation_residual=series.conservation_residual,
         alert_active=active,
         peak_backlog=jnp.max(series.backlog),
@@ -221,6 +250,8 @@ def finalize_taps(cfg: TelemetryConfig, series: TapSeries) -> Telemetry:
         total_processed=jnp.sum(series.processed),
         total_failed=jnp.sum(series.failed),
         total_wasted=jnp.sum(series.wasted),
+        total_missed=jnp.sum(series.missed),
+        total_shed=jnp.sum(series.shed),
         alert_tripped=tripped,
         alert_first_slot=first,
         alert_count=count,
@@ -268,6 +299,10 @@ METRICS = (
                "retry-pool total"),
     MetricSpec("transfer_occupancy", "series", "tasks",
                "in-flight WAN transfer total"),
+    MetricSpec("missed", "series", "tasks/slot",
+               "tasks expired past their deadline"),
+    MetricSpec("shed", "series", "tasks/slot",
+               "arrivals rejected by admission control"),
     MetricSpec("conservation_residual", "series", "tasks",
                "flow-conservation residual (should be ~0)"),
     MetricSpec("peak_backlog", "gauge", "tasks",
@@ -282,6 +317,10 @@ METRICS = (
                "failed attempts over the run"),
     MetricSpec("total_wasted", "counter", "gCO2",
                "carbon wasted on failed attempts over the run"),
+    MetricSpec("total_missed", "counter", "tasks",
+               "deadline misses over the run"),
+    MetricSpec("total_shed", "counter", "tasks",
+               "arrivals shed over the run"),
 )
 
 __all__ = [

@@ -1,0 +1,372 @@
+"""Deadline/SLO layer tests.
+
+The load-bearing claim is the anchor: `deadlines=no_deadlines(M)` is
+BIT-IDENTICAL to `deadlines=None` on every simulator variant (plain,
+WAN, faulted, faulted WAN, fleet) and on both score backends -- the
+deadline layer only changes trajectories when a finite deadline or
+shedding is actually configured. Everything else here checks the slot
+mechanics (oldest-first drain, expiry, admission) and the behavioral
+direction of the deadline-aware policies.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fleet_scenarios import (
+    build_fleet,
+    with_deadlines,
+    with_faults,
+)
+from repro.configs.paper_workloads import V_PAPER, paper_spec
+from repro.core import (
+    CarbonIntensityPolicy,
+    LookaheadDPPPolicy,
+    RandomCarbonSource,
+    UniformArrivals,
+    simulate,
+)
+from repro.core.simulator import simulate_fleet
+from repro.deadlines import (
+    DeadlineState,
+    EDDPolicy,
+    SlackThresholdPolicy,
+    WaitAwhilePolicy,
+    deadline_view,
+    init_deadlines,
+    make_deadlines,
+    no_deadlines,
+    stack_deadlines,
+    step_deadlines,
+)
+from repro.faults import StalenessGuardPolicy, make_faults
+from repro.forecast import SeasonalNaiveForecaster
+
+T = 96
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = paper_spec()
+    return (
+        spec,
+        RandomCarbonSource(N=spec.N),
+        UniformArrivals(M=spec.M),
+        jax.random.PRNGKey(7),
+    )
+
+
+def _assert_bitwise(r0, r1, fields):
+    for name in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0, name)),
+            np.asarray(getattr(r1, name)), err_msg=name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# The anchor: no_deadlines == deadlines-off, bitwise, everywhere.
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_anchor_plain(setup, backend):
+    spec, carbon, arrive, key = setup
+    pol = CarbonIntensityPolicy(V=V_PAPER, score_backend=backend)
+    r0 = simulate(pol, spec, carbon, arrive, T, key)
+    r1 = simulate(pol, spec, carbon, arrive, T, key,
+                  deadlines=no_deadlines(spec.M))
+    _assert_bitwise(r0, r1, ("emissions", "Qe", "Qc", "processed",
+                             "dispatched", "energy_edge", "energy_cloud"))
+    assert float(r1.deadlines.total_missed) == 0.0
+    assert float(r1.deadlines.total_shed) == 0.0
+    # the age rings shadow Qe exactly
+    np.testing.assert_array_equal(
+        np.asarray(jnp.sum(r1.deadlines.Qd, axis=-1)), np.asarray(r1.Qe)
+    )
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_anchor_wan(setup, backend):
+    from repro.network.graph import star_graph
+    from repro.network.policy import NetworkAwareDPPPolicy
+
+    spec, carbon, arrive, key = setup
+    g = star_graph(spec.M, spec.N, np.random.default_rng(0))
+    pol = NetworkAwareDPPPolicy(V=V_PAPER, score_backend=backend)
+    r0 = simulate(pol, spec, carbon, arrive, T, key, graph=g)
+    r1 = simulate(pol, spec, carbon, arrive, T, key, graph=g,
+                  deadlines=no_deadlines(spec.M))
+    _assert_bitwise(r0, r1, ("emissions", "Qe", "Qc", "Qt", "processed",
+                             "energy_transfer"))
+
+
+def test_anchor_faulted(setup):
+    spec, carbon, arrive, key = setup
+    fp = make_faults(spec.N, cloud_p_down=0.02, cloud_p_up=0.3,
+                     task_p_fail=0.05, telem_p_down=0.1, telem_p_up=0.2)
+    pol = StalenessGuardPolicy(inner=CarbonIntensityPolicy(V=V_PAPER))
+    r0 = simulate(pol, spec, carbon, arrive, T, key, faults=fp)
+    r1 = simulate(pol, spec, carbon, arrive, T, key, faults=fp,
+                  deadlines=no_deadlines(spec.M))
+    _assert_bitwise(r0, r1, ("emissions", "Qe", "Qc", "retry", "failed",
+                             "requeued", "backlog"))
+
+
+def test_anchor_faulted_wan(setup):
+    from repro.network.graph import star_graph
+    from repro.network.policy import NetworkAwareDPPPolicy
+
+    spec, carbon, arrive, key = setup
+    g = star_graph(spec.M, spec.N, np.random.default_rng(0))
+    fp = make_faults(spec.N, L=g.L, link_p_down=0.1, link_p_up=0.3,
+                     task_p_fail=0.02)
+    pol = StalenessGuardPolicy(inner=NetworkAwareDPPPolicy(V=V_PAPER))
+    r0 = simulate(pol, spec, carbon, arrive, T, key, graph=g, faults=fp)
+    r1 = simulate(pol, spec, carbon, arrive, T, key, graph=g, faults=fp,
+                  deadlines=no_deadlines(spec.M))
+    _assert_bitwise(r0, r1, ("emissions", "Qe", "Qc", "Qt", "retry",
+                             "backlog"))
+
+
+def test_anchor_fleet():
+    fleet = build_fleet(["diurnal-slack", "bursty"], per_kind=2,
+                        M=4, N=3, Tc=24)
+    key = jax.random.PRNGKey(3)
+    pol = CarbonIntensityPolicy(V=V_PAPER)
+    r0 = simulate_fleet(pol, fleet, 48, key)
+    nd = stack_deadlines([no_deadlines(4) for _ in range(fleet.F)])
+    r1 = simulate_fleet(pol, fleet._replace(deadlines=nd), 48, key)
+    _assert_bitwise(r0, r1, ("emissions", "Qe", "Qc", "processed"))
+    assert float(jnp.sum(r1.deadlines.missed)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Slot mechanics.
+
+
+def test_oldest_first_drain():
+    p = no_deadlines(1, D=4)
+    ds = DeadlineState(
+        Qd=jnp.asarray([[2.0, 3.0, 1.0, 4.0]]),
+        mu=jnp.zeros((1,)),
+    )
+    # 6 dispatches drain ring 3 (4), ring 2 (1), then 1 from ring 1;
+    # rings then age one slot (sticky top).
+    nxt, admitted, expired, shed = step_deadlines(
+        p, ds, jnp.asarray([6.0]), jnp.asarray([5.0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(nxt.Qd), [[5.0, 2.0, 2.0, 0.0]]
+    )
+    assert float(admitted[0]) == 5.0
+    assert float(expired[0]) == 0.0 and float(shed[0]) == 0.0
+
+
+def test_expiry_counts_unserved_tasks():
+    # deadline 0: one service opportunity. 3 queued at ring 0, serve 1,
+    # the other 2 expire (ring index 0 >= deadline 0 post-drain).
+    p = make_deadlines(1, D=4, deadline=0.0)
+    ds = DeadlineState(Qd=jnp.asarray([[3.0, 0.0, 0.0, 0.0]]),
+                       mu=jnp.zeros((1,)))
+    nxt, admitted, expired, shed = step_deadlines(
+        p, ds, jnp.asarray([1.0]), jnp.asarray([0.0])
+    )
+    assert float(expired[0]) == 2.0
+    assert float(jnp.sum(nxt.Qd)) == 0.0
+
+
+def test_admission_sheds_overload_but_cold_estimator_admits():
+    p = make_deadlines(1, D=8, deadline=1.0, shed_on=1.0, headroom=1.0)
+    # cold estimator (mu = 0): everything admitted, no evidence to shed
+    ds = init_deadlines(1, 8)
+    nxt, admitted, expired, shed = step_deadlines(
+        p, ds, jnp.asarray([0.0]), jnp.asarray([10.0])
+    )
+    assert float(admitted[0]) == 10.0 and float(shed[0]) == 0.0
+    # warm estimator at mu = 2: cap = floor(2 * (1+1)) - queued
+    ds = DeadlineState(Qd=nxt.Qd * 0.0, mu=jnp.asarray([2.0]))
+    nxt, admitted, expired, shed = step_deadlines(
+        p, ds, jnp.asarray([0.0]), jnp.asarray([10.0])
+    )
+    assert float(admitted[0]) == 4.0 and float(shed[0]) == 6.0
+
+
+def test_deadline_view_slack_and_due():
+    p = make_deadlines(2, D=4, deadline=[2.0, jnp.inf])
+    ds = DeadlineState(
+        Qd=jnp.asarray([[0.0, 0.0, 1.0, 0.0],
+                        [0.0, 0.0, 0.0, 0.0]]),
+        mu=jnp.zeros((2,)),
+    )
+    v = deadline_view(p, ds)
+    assert float(v.slack[0]) == 0.0      # oldest at ring 2, deadline 2
+    assert float(v.due[0]) == 1.0
+    assert not np.isfinite(float(v.slack[1]))  # empty queue
+    assert float(v.due[1]) == 0.0
+
+
+def test_make_deadlines_validates():
+    with pytest.raises(ValueError, match="finite deadlines"):
+        make_deadlines(2, D=8, deadline=9.0)
+    with pytest.raises(ValueError, match="unknown DeadlineParams"):
+        make_deadlines(2, deadlnie=3.0)
+
+
+# ---------------------------------------------------------------------------
+# Conservation with expiry + shedding (deterministic twin of the
+# hypothesis property).
+
+
+def test_conservation_with_expiry_and_shedding(setup):
+    spec, carbon, arrive, key = setup
+    dl = make_deadlines(spec.M, deadline=2.0, shed_on=1.0, headroom=0.9)
+    r = simulate(CarbonIntensityPolicy(V=V_PAPER), spec, carbon, arrive,
+                 T, key, deadlines=dl)
+    led = r.deadlines
+    assert float(led.total_missed) > 0.0  # the scenario actually bites
+    arrived = float(jnp.sum(led.admitted) + led.total_shed)
+    balance = (
+        float(jnp.sum(r.Qe[-1]) + jnp.sum(r.Qc[-1]))
+        + float(jnp.sum(r.processed))
+        + float(led.total_missed) + float(led.total_shed)
+    )
+    assert arrived == balance  # exact in f32: all integral counts
+
+
+# ---------------------------------------------------------------------------
+# Deadline-aware policies.
+
+
+def test_slack_threshold_cuts_misses(setup):
+    spec, carbon, arrive, key = setup
+    dl = make_deadlines(spec.M, deadline=1.0)
+    base = simulate(CarbonIntensityPolicy(V=V_PAPER), spec, carbon,
+                    arrive, T, key, deadlines=dl)
+    aware = simulate(SlackThresholdPolicy(V=V_PAPER), spec, carbon,
+                     arrive, T, key, deadlines=dl)
+    assert float(aware.deadlines.total_missed) < \
+        0.1 * float(base.deadlines.total_missed)
+
+
+def test_edd_serves_urgent_first(setup):
+    spec, carbon, arrive, key = setup
+    dl = make_deadlines(spec.M, deadline=1.0)
+    base = simulate(CarbonIntensityPolicy(V=V_PAPER), spec, carbon,
+                    arrive, T, key, deadlines=dl)
+    edd = simulate(EDDPolicy(), spec, carbon, arrive, T, key,
+                   deadlines=dl)
+    assert float(edd.deadlines.total_missed) < \
+        float(base.deadlines.total_missed)
+
+
+def test_waitawhile_zero_window_matches_lookahead(setup):
+    """With W = 0 and nothing ever due, the WaitAwhile gate admits only
+    h = 0, where the strictly-cheaper count is 0 < J: every slot is an
+    act-now slot and the policy is bitwise LookaheadDPP."""
+    spec, carbon, arrive, key = setup
+    fc = SeasonalNaiveForecaster(H=4, period=8)
+    dl = make_deadlines(spec.M, window=0.0)  # deadlines stay +inf
+    r0 = simulate(LookaheadDPPPolicy(V=V_PAPER, H=4), spec, carbon,
+                  arrive, T, key, forecaster=fc, deadlines=dl)
+    r1 = simulate(WaitAwhilePolicy(V=V_PAPER, H=4), spec, carbon,
+                  arrive, T, key, forecaster=fc, deadlines=dl)
+    _assert_bitwise(r0, r1, ("emissions", "Qe", "Qc", "processed"))
+
+
+def test_shedding_bounds_overload_backlog():
+    fleet = build_fleet(["overload"], per_kind=2, M=4, N=3, Tc=24)
+    key = jax.random.PRNGKey(5)
+    pol = CarbonIntensityPolicy(V=V_PAPER)
+    doomed = with_deadlines(fleet, "tight-uniform")
+    shed = with_deadlines(fleet, "shed-overload")
+    r0 = simulate_fleet(pol, doomed, 96, key)
+    r1 = simulate_fleet(pol, shed, 96, key)
+    assert float(jnp.sum(r1.deadlines.shed)) > 0.0
+    assert float(jnp.sum(r1.deadlines.missed)) < \
+        float(jnp.sum(r0.deadlines.missed))
+
+
+def test_guard_composes_with_deadline_policies():
+    """StalenessGuard forwards deadline_view: the guarded slack policy
+    under faults + deadlines runs and still cuts misses vs the guarded
+    deadline-blind baseline."""
+    fleet = build_fleet(["diurnal"], per_kind=2, M=4, N=3, Tc=24)
+    fleet = with_faults(fleet, "telemetry-brownout")
+    fleet = with_deadlines(fleet, "tight-uniform")
+    key = jax.random.PRNGKey(11)
+    base = simulate_fleet(
+        StalenessGuardPolicy(inner=CarbonIntensityPolicy(V=V_PAPER)),
+        fleet, 96, key)
+    aware = simulate_fleet(
+        StalenessGuardPolicy(inner=SlackThresholdPolicy(V=V_PAPER)),
+        fleet, 96, key)
+    assert float(jnp.sum(aware.deadlines.missed)) < \
+        float(jnp.sum(base.deadlines.missed))
+
+
+# ---------------------------------------------------------------------------
+# Telemetry integration (satellite: monitors + parity).
+
+
+def test_telemetry_off_parity_with_deadlines_on(setup):
+    from repro.telemetry import TelemetryConfig
+
+    spec, carbon, arrive, key = setup
+    dl = make_deadlines(spec.M, deadline=1.0)
+    pol = SlackThresholdPolicy(V=V_PAPER)
+    r0 = simulate(pol, spec, carbon, arrive, T, key, deadlines=dl)
+    r1 = simulate(pol, spec, carbon, arrive, T, key, deadlines=dl,
+                  telemetry=TelemetryConfig())
+    _assert_bitwise(r0, r1, ("emissions", "Qe", "Qc", "processed"))
+    np.testing.assert_array_equal(
+        np.asarray(r0.deadlines.missed), np.asarray(r1.deadlines.missed)
+    )
+    # and the taps agree with the ledger
+    np.testing.assert_array_equal(
+        np.asarray(r1.telemetry.missed), np.asarray(r1.deadlines.missed)
+    )
+
+
+def test_deadline_monitors_fire(setup):
+    from repro.telemetry import TelemetryConfig
+    from repro.telemetry.monitors import MONITORS
+
+    spec, carbon, arrive, key = setup
+    k_miss = MONITORS.index("deadline_miss")
+    k_shed = MONITORS.index("shed_rate")
+    dl = make_deadlines(spec.M, deadline=1.0, shed_on=1.0, headroom=0.5)
+    r = simulate(CarbonIntensityPolicy(V=V_PAPER), spec, carbon, arrive,
+                 T, key, deadlines=dl, telemetry=TelemetryConfig())
+    tel = r.telemetry
+    assert int(tel.alert_tripped[k_miss]) == 1
+    assert int(tel.alert_tripped[k_shed]) == 1
+    assert tel.alert_active.shape[-1] == len(MONITORS)
+    # conservation monitor must NOT fire: missed/shed are in the ledger
+    k_cons = MONITORS.index("conservation_drift")
+    assert int(tel.alert_tripped[k_cons]) == 0
+    # a deadline-off run never fires either monitor
+    r0 = simulate(CarbonIntensityPolicy(V=V_PAPER), spec, carbon,
+                  arrive, T, key, telemetry=TelemetryConfig())
+    assert int(r0.telemetry.alert_tripped[k_miss]) == 0
+    assert int(r0.telemetry.alert_tripped[k_shed]) == 0
+
+
+def test_record_summary_bitwise_with_deadlines(setup):
+    spec, carbon, arrive, key = setup
+    dl = make_deadlines(spec.M, deadline=2.0, shed_on=1.0)
+    pol = SlackThresholdPolicy(V=V_PAPER)
+    full = simulate(pol, spec, carbon, arrive, T, key, deadlines=dl,
+                    record="full")
+    summ = simulate(pol, spec, carbon, arrive, T, key, deadlines=dl,
+                    record="summary")
+    _assert_bitwise(full, summ, ("emissions", "processed", "dispatched"))
+    for name in ("missed", "shed", "admitted"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full.deadlines, name)),
+            np.asarray(getattr(summ.deadlines, name)), err_msg=name,
+        )
+    assert summ.deadlines.Qd.shape[0] == 1
+    np.testing.assert_array_equal(
+        np.asarray(full.deadlines.Qd[-1]),
+        np.asarray(summ.deadlines.Qd[-1]),
+    )

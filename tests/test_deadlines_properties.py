@@ -1,0 +1,168 @@
+"""Property-based deadline-layer invariants (skipped cleanly when
+`hypothesis` is absent), extending the test_faults_properties pattern:
+
+* task conservation WITH expiry and shedding under ARBITRARY fault
+  streams -- every run,
+    cum(arrived) = Qe + Qc + retry + cum(processed) - cum(failed)
+                   + cum(missed) + cum(shed),
+  exact in float32 because every term is an integral count (drains and
+  expiries move integral ring contents; the admission cap is floored);
+* the age rings re-sum to the edge queue exactly, under any stream;
+* record="summary" scalar series (ledger included) are bitwise-equal
+  to record="full" with the deadline layer threaded through the carry.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import fleet_scenarios  # noqa: E402
+from repro.core import (  # noqa: E402
+    QueueLengthPolicy,
+    RandomCarbonSource,
+    UniformArrivals,
+    simulate,
+)
+from repro.deadlines import (  # noqa: E402
+    SlackThresholdPolicy,
+    make_deadlines,
+)
+from repro.faults import StalenessGuardPolicy, make_faults  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+T = 32
+M, N = 3, 2
+
+rate = st.floats(0.0, 1.0, allow_nan=False, width=32)
+
+
+@st.composite
+def fault_params(draw):
+    return make_faults(
+        N,
+        cloud_p_down=draw(st.floats(0.0, 0.5, width=32)),
+        cloud_p_up=draw(rate),
+        brown_p_start=draw(rate),
+        brown_p_end=draw(rate),
+        brown_floor=draw(st.floats(0.1, 1.0, width=32)),
+        task_p_fail=draw(rate),
+        telem_p_down=draw(rate),
+        telem_p_up=draw(rate),
+        backoff_max=float(draw(st.integers(0, 8))),
+    )
+
+
+@st.composite
+def deadline_params(draw):
+    # per-type deadlines mixing finite values with +inf, random
+    # windows, and shedding on/off with sub-unity headroom
+    d = [
+        float(draw(st.integers(0, 6)))
+        if draw(st.booleans()) else np.inf
+        for _ in range(M)
+    ]
+    return make_deadlines(
+        M,
+        deadline=np.asarray(d, np.float32),
+        window=float(draw(st.integers(0, 8))),
+        shed_on=1.0 if draw(st.booleans()) else 0.0,
+        headroom=draw(st.floats(0.5, 1.2, width=32)),
+    )
+
+
+def _run(fp, dl, seed, policy=None, record="full"):
+    spec = fleet_scenarios._base(M, N)
+    return simulate(
+        policy or QueueLengthPolicy(), spec,
+        RandomCarbonSource(N=N), UniformArrivals(M=M),
+        T, jax.random.PRNGKey(seed), faults=fp, deadlines=dl,
+        record=record,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(fp=fault_params(), dl=deadline_params(),
+       seed=st.integers(0, 2**31 - 1))
+def test_conservation_with_expiry_and_shedding(fp, dl, seed):
+    """No fault/deadline mix creates or destroys tasks: admitted+shed
+    arrivals are exactly accounted for by queues, completed work,
+    failures in flight, expiries and sheds -- bitwise in f32."""
+    r = _run(fp, dl, seed)
+    led = r.deadlines
+    arrived = np.cumsum(np.asarray(led.admitted)) + np.cumsum(
+        np.asarray(led.shed)
+    )
+    accounted = (
+        np.asarray(r.backlog)
+        + np.cumsum(np.asarray(r.processed))
+        - np.cumsum(np.asarray(r.failed))
+        + np.cumsum(np.asarray(led.missed))
+        + np.cumsum(np.asarray(led.shed))
+    )
+    np.testing.assert_array_equal(arrived, accounted)
+    # age rings shadow the edge queue exactly, every recorded slot
+    np.testing.assert_array_equal(
+        np.asarray(jnp.sum(led.Qd, axis=-1)), np.asarray(r.Qe)
+    )
+    # nothing negative or NaN anywhere in the ledger
+    for name in ("missed", "shed", "admitted", "Qd"):
+        v = np.asarray(getattr(led, name))
+        assert np.all(v >= 0.0), name
+        assert not np.any(np.isnan(v)), name
+
+
+@settings(max_examples=8, deadline=None)
+@given(fp=fault_params(), dl=deadline_params(),
+       seed=st.integers(0, 2**31 - 1))
+def test_summary_record_scalars_bitwise_equal_full(fp, dl, seed):
+    """record="summary" shares the scan body with record="full" with
+    the deadline state in the carry: every scalar series -- ledger
+    included -- is bitwise identical; only recording density differs."""
+    guard = StalenessGuardPolicy(
+        inner=SlackThresholdPolicy(V=0.05)
+    )
+    full = _run(fp, dl, seed, policy=guard, record="full")
+    summ = _run(fp, dl, seed, policy=guard, record="summary")
+    for name in type(full)._fields:
+        if name in ("Qe", "Qc", "retry", "telemetry", "deadlines"):
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full, name)),
+            np.asarray(getattr(summ, name)), err_msg=name,
+        )
+    for name in ("missed", "shed", "admitted"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full.deadlines, name)),
+            np.asarray(getattr(summ.deadlines, name)), err_msg=name,
+        )
+    assert summ.deadlines.Qd.shape[0] == 1
+    np.testing.assert_array_equal(
+        np.asarray(full.deadlines.Qd[-1]),
+        np.asarray(summ.deadlines.Qd[-1]),
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(dl=deadline_params(), seed=st.integers(0, 2**31 - 1))
+def test_deadline_policies_conserve_without_faults(dl, seed):
+    """The deadline-aware policy keeps exact conservation on the plain
+    simulator too (its score perturbations change the schedule, never
+    the ledger identities)."""
+    spec = fleet_scenarios._base(M, N)
+    r = simulate(
+        SlackThresholdPolicy(V=0.05), spec,
+        RandomCarbonSource(N=N), UniformArrivals(M=M),
+        T, jax.random.PRNGKey(seed), deadlines=dl,
+    )
+    led = r.deadlines
+    arrived = float(jnp.sum(led.admitted) + led.total_shed)
+    accounted = (
+        float(jnp.sum(r.Qe[-1]) + jnp.sum(r.Qc[-1]))
+        + float(jnp.sum(r.processed))
+        + float(led.total_missed) + float(led.total_shed)
+    )
+    assert arrived == accounted

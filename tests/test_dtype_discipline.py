@@ -60,15 +60,15 @@ def _assert_disciplined(res, label):
     assert fields, f"{label}: result is not a NamedTuple"
     for field in fields:
         leaf = getattr(res, field)
-        if field == "telemetry":
-            # Off by default in these runs; when a frame is attached
-            # its leaves obey the same discipline (recurse below).
+        if field in ("telemetry", "deadlines"):
+            # Off by default in these runs; when a frame/ledger is
+            # attached its leaves obey the same discipline (recurse).
             if leaf is None:
                 continue
             for path, sub in jax.tree_util.tree_flatten_with_path(leaf)[0]:
                 dtype = str(sub.dtype)
                 assert dtype in ALLOWED, (
-                    f"{label}: telemetry leaf {path} is {dtype}"
+                    f"{label}: {field} leaf {path} is {dtype}"
                 )
             continue
         dtype = str(leaf.dtype)
@@ -107,6 +107,15 @@ def test_fleet_telemetry_dtypes(fleet):
                          jax.random.PRNGKey(0), record="summary",
                          telemetry=TelemetryConfig())
     _assert_disciplined(res, "ci/telemetry-on")
+
+
+def test_fleet_deadline_dtypes(fleet):
+    from repro.configs.fleet_scenarios import with_deadlines
+
+    res = simulate_fleet(CarbonIntensityPolicy(),
+                         with_deadlines(fleet, "tight-uniform"), T,
+                         jax.random.PRNGKey(0), record="summary")
+    _assert_disciplined(res, "ci/deadlines-on")
 
 
 def test_fleet_trajectory_dtypes_stable_under_x64(fleet):

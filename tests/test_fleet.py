@@ -74,7 +74,7 @@ def test_fleet_64_instances_one_jitted_call():
 def test_registry_names_and_shapes():
     assert set(SCENARIOS) == {
         "diurnal", "diurnal-slack", "bursty", "heterogeneous-fleet",
-        "multi-region-uk",
+        "multi-region-uk", "overload",
     }
     fleet = build_fleet(["bursty", "multi-region-uk"], per_kind=3,
                         M=7, N=4, Tc=30, seed=1)
